@@ -1,0 +1,42 @@
+"""Shared benchmark plumbing: cached workload runs, CSV row helpers."""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.core import simulator, traces
+
+QUICK_REQS_1CORE = 10240
+QUICK_REQS_8CORE = 6144
+
+
+@functools.lru_cache(maxsize=None)
+def single_core(app: str, mechs=simulator.PAPER_MECHS, **over):
+    return simulator.run_single_core(app, mechanisms=mechs,
+                                     n_reqs=QUICK_REQS_1CORE,
+                                     cfg_overrides=dict(over) or None)
+
+
+@functools.lru_cache(maxsize=None)
+def eight_core(idx: int, mechs=simulator.PAPER_MECHS, per_channel=None,
+               **over):
+    wl = traces.eight_core_workloads()[idx]
+    return simulator.run_eight_core(
+        wl, mechanisms=mechs, per_channel=per_channel or QUICK_REQS_8CORE,
+        cfg_overrides=dict(over) or None)
+
+
+# two workloads per intensity class for quick benches
+WL_IDX = {25: [0, 2], 50: [5, 7], 75: [10, 12], 100: [15, 17]}
+
+
+def timed(fn):
+    t0 = time.time()
+    out = fn()
+    return out, (time.time() - t0) * 1e6
+
+
+def geo_or_mean(xs):
+    return float(np.mean(xs))

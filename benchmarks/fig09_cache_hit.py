@@ -1,0 +1,23 @@
+"""Figure 9: in-DRAM cache hit rates (LISA-VILLA vs FIGCache-Slow/Fast)."""
+import numpy as np
+
+from benchmarks import common
+
+
+def run():
+    by = {}
+    rows = []
+    for frac, idxs in common.WL_IDX.items():
+        for i in idxs:
+            res = common.eight_core(i)
+            for m in ("lisa_villa", "figcache_slow", "figcache_fast"):
+                by.setdefault((frac, m), []).append(res[m].cache_hit_rate)
+                rows.append({"intensity": frac, "workload": i, "mechanism": m,
+                             "cache_hit": round(res[m].cache_hit_rate, 4)})
+    summary = {f"{frac}%/{m}": round(float(np.mean(v)), 4)
+               for (frac, m), v in by.items()}
+    return rows, summary
+
+
+if __name__ == "__main__":
+    print(run()[1])

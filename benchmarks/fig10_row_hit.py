@@ -1,0 +1,24 @@
+"""Figure 10: DRAM row-buffer hit rate (the co-location effect)."""
+import numpy as np
+
+from benchmarks import common
+
+
+def run():
+    by = {}
+    rows = []
+    for frac, idxs in common.WL_IDX.items():
+        for i in idxs:
+            res = common.eight_core(i)
+            for m in ("base", "lisa_villa", "figcache_slow", "figcache_fast"):
+                by.setdefault((frac, m), []).append(res[m].row_hit_rate)
+                rows.append({"intensity": frac, "workload": i, "mechanism": m,
+                             "row_hit": round(res[m].row_hit_rate, 4)})
+    summary = {f"{frac}%/{m}": round(float(np.mean(v)), 4)
+               for (frac, m), v in by.items()}
+    # paper: FIGCache ~+18pp over LISA-VILLA; LISA == base
+    return rows, summary
+
+
+if __name__ == "__main__":
+    print(run()[1])

@@ -1,0 +1,28 @@
+"""Figure 12: in-DRAM cache capacity sweep (fast subarrays 1..16)."""
+import numpy as np
+
+from benchmarks import common
+from repro.core import simulator
+
+
+def run():
+    rows = []
+    summary = {}
+    for n_fs, cache_rows in [(1, 4), (2, 8), (4, 16), (8, 32), (16, 64)]:
+        # quick traces under-fill the cache: scale rows down 8x so the sweep
+        # exercises the same fill fraction the paper's full runs see
+        sp = []
+        for i in (common.WL_IDX[50][0], common.WL_IDX[100][1]):
+            res = common.eight_core(i, mechs=("base", "figcache_fast"),
+                                    per_channel=12288,
+                                    cache_rows=cache_rows)
+            sp.append(simulator.speedup_summary(res)["figcache_fast"])
+        summary[f"FS={n_fs}"] = round(float(np.mean(sp)), 4)
+        rows.append({"fast_subarrays": n_fs, "cache_rows": cache_rows,
+                     "wspeedup": summary[f"FS={n_fs}"]})
+    # paper: diminishing returns past 2 fast subarrays
+    return rows, summary
+
+
+if __name__ == "__main__":
+    print(run()[1])

@@ -1,0 +1,23 @@
+"""Figure 13: row-segment size sweep (8..128 blocks; paper peak at 16)."""
+import numpy as np
+
+from benchmarks import common
+from repro.core import simulator
+
+
+def run():
+    rows = []
+    summary = {}
+    for sb in (8, 16, 32, 64, 128):
+        sp = []
+        for i in (common.WL_IDX[50][0], common.WL_IDX[100][1]):
+            res = common.eight_core(i, mechs=("base", "figcache_fast"),
+                                    seg_blocks=sb)
+            sp.append(simulator.speedup_summary(res)["figcache_fast"])
+        summary[f"seg={sb}"] = round(float(np.mean(sp)), 4)
+        rows.append({"seg_blocks": sb, "wspeedup": summary[f"seg={sb}"]})
+    return rows, summary
+
+
+if __name__ == "__main__":
+    print(run()[1])

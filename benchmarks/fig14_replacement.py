@@ -1,0 +1,26 @@
+"""Figure 14: replacement policy sweep (RowBenefit vs SegmentBenefit/LRU/
+Random).  Uses longer traces + a smaller cache so eviction pressure is real.
+"""
+import numpy as np
+
+from benchmarks import common
+from repro.core import simulator
+
+
+def run():
+    rows = []
+    summary = {}
+    for pol in ("row_benefit", "segment_benefit", "lru", "random"):
+        sp = []
+        for i in (common.WL_IDX[50][0], common.WL_IDX[100][1]):
+            res = common.eight_core(i, mechs=("base", "figcache_fast"),
+                                    per_channel=12288, policy=pol,
+                                    cache_rows=4)   # real eviction pressure
+            sp.append(simulator.speedup_summary(res)["figcache_fast"])
+        summary[pol] = round(float(np.mean(sp)), 4)
+        rows.append({"policy": pol, "wspeedup": summary[pol]})
+    return rows, summary
+
+
+if __name__ == "__main__":
+    print(run()[1])

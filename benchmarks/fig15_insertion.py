@@ -1,0 +1,23 @@
+"""Figure 15: insertion-threshold sweep (1 = insert-any-miss is best)."""
+import numpy as np
+
+from benchmarks import common
+from repro.core import simulator
+
+
+def run():
+    rows = []
+    summary = {}
+    for th in (1, 2, 4, 8):
+        sp = []
+        for i in (common.WL_IDX[50][0], common.WL_IDX[100][1]):
+            res = common.eight_core(i, mechs=("base", "figcache_fast"),
+                                    insert_threshold=th)
+            sp.append(simulator.speedup_summary(res)["figcache_fast"])
+        summary[f"th={th}"] = round(float(np.mean(sp)), 4)
+        rows.append({"threshold": th, "wspeedup": summary[f"th={th}"]})
+    return rows, summary
+
+
+if __name__ == "__main__":
+    print(run()[1])

@@ -1,0 +1,71 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline)."""
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_all():
+    out = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(f) as fh:
+            d = json.load(fh)
+        d["_file"] = os.path.basename(f)
+        out.append(d)
+    return out
+
+
+def run():
+    rows = []
+    for d in load_all():
+        if d.get("skipped") or d.get("error"):
+            rows.append({"cell": d["_file"].replace(".json", ""),
+                         "status": "skipped" if d.get("skipped") else "ERROR",
+                         "note": d.get("reason", d.get("error", ""))[:60]})
+            continue
+        r = d["roofline"]
+        rows.append({
+            "cell": f'{d["arch"]}__{d["shape"]}__{d["mesh"]}',
+            "mem_GiB": round(d["memory"]["total_bytes_per_device"] / 2**30, 2),
+            "compute_s": round(r["compute_s"], 4),
+            "memory_s": round(r["memory_s"], 4),
+            "collective_s": round(r["collective_s"], 4),
+            "bottleneck": r["bottleneck"].replace("_s", ""),
+            "useful_ratio": round(r["useful_ratio"], 3),
+            "roofline_frac": round(r["roofline_frac"], 4),
+        })
+    ok = [r for r in rows if "roofline_frac" in r]
+    summary = {
+        "cells": len(rows),
+        "compiled": len(ok),
+        "mean_roofline_frac": round(
+            sum(r["roofline_frac"] for r in ok) / max(1, len(ok)), 4),
+        "bottlenecks": {b: sum(1 for r in ok if r["bottleneck"] == b)
+                        for b in ("compute", "memory", "collective")},
+    }
+    return rows, summary
+
+
+def table_md():
+    rows, _ = run()
+    hdr = ("| cell | mem GiB/dev | compute s | memory s | collective s | "
+           "bottleneck | useful | roofline frac |")
+    sep = "|" + "---|" * 8
+    lines = [hdr, sep]
+    for r in rows:
+        if "roofline_frac" not in r:
+            lines.append(f"| {r['cell']} | {r['status']}: {r['note']} |" +
+                         " |" * 6)
+            continue
+        lines.append(
+            f"| {r['cell']} | {r['mem_GiB']} | {r['compute_s']} | "
+            f"{r['memory_s']} | {r['collective_s']} | {r['bottleneck']} | "
+            f"{r['useful_ratio']} | {r['roofline_frac']} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(table_md())
+    print()
+    print(run()[1])

@@ -1,0 +1,61 @@
+"""Benchmark entrypoint — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (derived = the headline metric the
+paper reports for that figure).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig07_single_core, fig08_eight_core,
+                            fig09_cache_hit, fig10_row_hit, fig11_energy,
+                            fig12_capacity, fig13_segment_size,
+                            fig14_replacement, fig15_insertion, overhead)
+
+    benches = [
+        ("fig07_single_core", fig07_single_core,
+         lambda s: s.get("intensive/figcache_fast")),
+        ("fig08_eight_core", fig08_eight_core,
+         lambda s: s.get("avg/figcache_fast")),
+        ("fig09_cache_hit", fig09_cache_hit,
+         lambda s: s.get("100%/figcache_fast")),
+        ("fig10_row_hit", fig10_row_hit,
+         lambda s: s.get("100%/figcache_fast")),
+        ("fig11_energy", fig11_energy,
+         lambda s: s.get("100%/figcache_fast/dram")),
+        ("fig12_capacity", fig12_capacity, lambda s: s.get("FS=2")),
+        ("fig13_segment_size", fig13_segment_size, lambda s: s.get("seg=16")),
+        ("fig14_replacement", fig14_replacement,
+         lambda s: s.get("row_benefit")),
+        ("fig15_insertion", fig15_insertion, lambda s: s.get("th=1")),
+        ("overhead_table", overhead,
+         lambda s: s.get("fts_kB_per_channel")),
+    ]
+    print("name,us_per_call,derived")
+    details = {}
+    for name, mod, pick in benches:
+        t0 = time.time()
+        rows, summary = mod.run()
+        us = (time.time() - t0) * 1e6
+        print(f"{name},{us:.0f},{pick(summary)}", flush=True)
+        details[name] = summary
+    # roofline table is read from dry-run artifacts (no compute)
+    try:
+        from benchmarks import roofline
+        t0 = time.time()
+        rows, summary = roofline.run()
+        us = (time.time() - t0) * 1e6
+        print(f"roofline,{us:.0f},{summary['mean_roofline_frac']}")
+        details["roofline"] = summary
+    except Exception as e:  # dry-run not yet executed
+        print(f"roofline,0,unavailable({e})")
+    print("\n# summaries", file=sys.stderr)
+    for k, v in details.items():
+        print(k, v, file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

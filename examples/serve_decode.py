@@ -1,0 +1,23 @@
+"""Serving example: batched prefill + decode, with the FIGCache-KV segment
+cache demo (hot KV segments relocated into the fast pool).
+
+    PYTHONPATH=src python examples/serve_decode.py [--arch qwen2-7b]
+"""
+import argparse
+
+from repro.launch.serve import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=2)
+    args = ap.parse_args()
+    run(args.arch, reduced=True, prompt_len=args.prompt_len, gen=args.gen,
+        batch=args.batch, figkv=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""End-to-end training driver example: train a ~100M-scale config for a few
+hundred steps with checkpoint/restart and async checkpointing.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200] [--arch qwen1.5-0.5b]
+
+Uses the same launch/train.py machinery as the production entry point.
+"""
+import argparse
+
+from repro.launch.train import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+    losses = run(args.arch, "train_4k", steps=args.steps, reduced=True,
+                 ckpt_dir=args.ckpt, ckpt_every=50,
+                 batch_override=args.batch, seq_override=args.seq)
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({'improved' if losses[-1] < losses[0] else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,253 @@
+"""Vectorized, cycle-approximate DRAM bank/row-buffer/FIGCache simulator.
+
+The JAX analogue of the paper's Ramulator setup (§7): a ``jax.lax.scan`` over a
+per-channel memory-request trace, ``jax.vmap``-ed over channels.  Per-bank
+state = open row + busy-until timestamp + an FTS (``core/fts.py``).  Six
+mechanisms (``core/timing.MechConfig``): base, lisa_villa, figcache_slow,
+figcache_fast, figcache_ideal, lldram.
+
+Modeling abstractions (documented in DESIGN.md §7):
+ * per-bank in-order service with bank-level parallelism (a request waits only
+   on its own bank) — FR-FCFS's row-hit-first effect is largely captured
+   because traces preserve row-visit runs;
+ * the processor is represented by the trace arrival times + an
+   MLP-weighted latency→CPI conversion in ``simulator.py``.
+
+Timestamps are int32 ticks (1/8 ns).  Latency accumulators are int32 ns.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fts as fts_lib
+from repro.core.timing import DDR4, GEOM, MechConfig, DRAMTimings, DRAMGeometry
+
+
+class Trace(NamedTuple):
+    """Per-channel request stream, already sorted by t_issue.
+
+    Shapes: single channel (T,), multi-channel (C, T).
+    """
+    t_issue: jax.Array   # int32 ticks
+    bank: jax.Array      # int32 [0, n_banks)
+    row: jax.Array       # int32 [0, n_rows)
+    col: jax.Array       # int32 [0, row_blocks) — cache-block column
+    is_write: jax.Array  # bool
+    core: jax.Array      # int32 [0, n_cores)
+
+
+N_MSHR = 8  # outstanding misses per core (paper Table 1) — closed-loop throttle
+
+
+class BankState(NamedTuple):
+    open_row: jax.Array   # (n_banks,) int32; -1 closed; cache rows >= n_rows
+    busy: jax.Array       # (n_banks,) int32 ticks
+    fts: fts_lib.FTS      # leaves have leading (n_banks,) dim
+    mshr_ring: jax.Array  # (n_cores, N_MSHR) int32 — completion times
+    mshr_idx: jax.Array   # (n_cores,) int32 — ring cursor
+    bus_free: jax.Array   # () int32 — channel data bus free time
+
+
+class Counters(NamedTuple):
+    acts_slow: jax.Array
+    acts_fast: jax.Array
+    reads: jax.Array
+    writes: jax.Array
+    reloc_blocks: jax.Array    # blocks moved into the cache
+    wb_blocks: jax.Array       # dirty writeback blocks
+    row_hits: jax.Array
+    cache_hits: jax.Array
+    insertions: jax.Array
+    lat_sum_ns: jax.Array      # (n_cores,)
+    req_cnt: jax.Array         # (n_cores,)
+    t_end: jax.Array           # ticks
+
+
+def init_state(cfg: MechConfig, geom: DRAMGeometry = GEOM) -> BankState:
+    n_slots = cfg.n_slots if cfg.has_cache else 1
+    spr = cfg.segs_per_row if cfg.has_cache else 1
+    one = fts_lib.init(n_slots, spr)
+    fts = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (geom.n_banks,) + a.shape).copy(), one)
+    return BankState(
+        open_row=jnp.full((geom.n_banks,), -1, jnp.int32),
+        busy=jnp.zeros((geom.n_banks,), jnp.int32),
+        fts=fts,
+        mshr_ring=jnp.zeros((geom.n_cores, N_MSHR), jnp.int32),
+        mshr_idx=jnp.zeros((geom.n_cores,), jnp.int32),
+        bus_free=jnp.int32(0),
+    )
+
+
+def init_counters(geom: DRAMGeometry = GEOM) -> Counters:
+    z = jnp.int32(0)
+    return Counters(z, z, z, z, z, z, z, z, z,
+                    jnp.zeros((geom.n_cores,), jnp.int32),
+                    jnp.zeros((geom.n_cores,), jnp.int32), z)
+
+
+def _lisa_hops(row: jax.Array, geom: DRAMGeometry) -> jax.Array:
+    """Distance (in subarrays) to the nearest interleaved fast subarray.
+
+    LISA-VILLA interleaves 16 fast subarrays among 64 slow ones (1 per 4)."""
+    sub = row // geom.rows_per_subarray
+    m = jnp.remainder(sub, 4)
+    return jnp.minimum(m, 4 - m)
+
+
+def make_step(cfg: MechConfig, t: DRAMTimings = DDR4,
+              geom: DRAMGeometry = GEOM):
+    """Build the scan body for one mechanism (static config => one jit)."""
+    spr = cfg.segs_per_row if cfg.has_cache else 1
+    benefit_max = (1 << cfg.benefit_bits) - 1
+    cache_base = jnp.int32(geom.n_rows)           # id-space for cache rows
+    reserved_sub = geom.n_subarrays - 1           # figcache_slow region
+    lisa = cfg.mechanism == "lisa_villa"
+    slow_cache = cfg.mechanism == "figcache_slow"
+    lldram = cfg.mechanism == "lldram"
+
+    def step(carry, req):
+        state, cnt = carry
+        bank = req.bank
+        fts_b = jax.tree.map(lambda a: a[bank], state.fts)
+        # closed loop: a core may not have more than N_MSHR requests in
+        # flight — it stalls until the request N_MSHR-ago completed
+        mshr_free = state.mshr_ring[req.core, state.mshr_idx[req.core]]
+        t_ready = jnp.maximum(req.t_issue, mshr_free)
+        t0 = jnp.maximum(t_ready, state.busy[bank])
+        open_b = state.open_row[bank]
+        step_id = cnt.reads + cnt.writes
+
+        # ---- cache lookup -------------------------------------------------
+        if cfg.has_cache:
+            seg = req.row * spr + req.col // cfg.seg_blocks
+            if slow_cache:   # never cache the subarray hosting reserved rows
+                cacheable = (req.row // geom.rows_per_subarray) != reserved_sub
+            else:
+                cacheable = jnp.bool_(True)
+            hit, slot = fts_lib.lookup(fts_b, seg)
+            hit = hit & cacheable
+        else:
+            seg = jnp.int32(0)
+            cacheable = jnp.bool_(False)
+            hit, slot = jnp.bool_(False), jnp.int32(0)
+
+        target_row = jnp.where(hit, cache_base + slot // spr, req.row)
+
+        # ---- service latency ---------------------------------------------
+        served_fast = (hit & cfg.fast_cache) | lldram
+        rcd = jnp.where(served_fast, t.rcd_fast, t.rcd)
+        rp = jnp.where(served_fast, t.rp_fast, t.rp)
+        row_hit = open_b == target_row
+        closed = open_b < 0
+        pre_act = jnp.where(row_hit, 0, rcd + jnp.where(closed, 0, rp))
+        # the 64 B burst serializes on the shared channel data bus — a
+        # contention source no in-DRAM cache can relieve
+        done = jnp.maximum(t0 + pre_act + t.cas, state.bus_free) + t.bl
+        # bank occupancy: column accesses pipeline at tCCD; an ACT(+PRE)
+        # occupies the bank for its own duration before the CAS can pipeline
+        serv_end = t0 + pre_act + t.ccd
+
+        # ---- miss path: insert-any-miss (+ optional threshold) ------------
+        if cfg.has_cache:
+            want, fts_b = fts_lib.should_insert(fts_b, seg, cfg.insert_threshold)
+            do_ins = ~hit & cacheable & want
+            ins = fts_lib.insert(fts_b, seg, req.is_write, step_id,
+                                 policy=cfg.policy, segs_per_row=spr)
+            if cfg.free_reloc:
+                reloc_cost = jnp.int32(0)
+            elif lisa:
+                # whole-row relocation, distance-dependent (src row is open)
+                hops = _lisa_hops(req.row, geom)
+                reloc_cost = hops * t.lisa_hop + t.rcd_fast
+                wb_hops = _lisa_hops(ins.evicted_tag, geom)
+                reloc_cost += jnp.where(
+                    ins.evicted_dirty, wb_hops * t.lisa_hop + t.rcd, 0)
+            else:
+                # FIGARO: seg_blocks RELOCs through the GRB.  The source row
+                # is already open serving the miss (§8.1) and the destination
+                # ACT overlaps via the per-subarray row-address latch (§4.1
+                # "multiple activations without a precharge"), so only the
+                # RELOC column transfers occupy the bank's column path.
+                reloc_cost = cfg.seg_blocks * t.reloc
+                # dirty-victim writeback needs the victim's home row opened
+                reloc_cost += jnp.where(
+                    ins.evicted_dirty,
+                    cfg.seg_blocks * t.reloc + t.rcd, 0)
+            reloc_cost = jnp.where(do_ins, reloc_cost, 0)
+            # after insertion the destination cache row is left open
+            new_open = jnp.where(
+                do_ins, cache_base + ins.slot // spr, target_row)
+            touched = fts_lib.touch(fts_b, slot, req.is_write, step_id,
+                                    benefit_max)
+            sel3 = lambda h, i, a, b, c: jnp.where(h, a, jnp.where(i, b, c))
+            fts_new = jax.tree.map(
+                functools.partial(sel3, hit, do_ins), touched, ins.fts, fts_b)
+            new_fts = jax.tree.map(
+                lambda full, one: full.at[bank].set(one), state.fts, fts_new)
+            moved = jnp.where(do_ins, cfg.seg_blocks, 0)
+            wb = jnp.where(do_ins & ins.evicted_dirty, cfg.seg_blocks, 0)
+            n_ins = do_ins.astype(jnp.int32)
+        else:
+            reloc_cost = jnp.int32(0)
+            new_open = target_row
+            new_fts = state.fts
+            moved = wb = n_ins = jnp.int32(0)
+
+        state = BankState(
+            open_row=state.open_row.at[bank].set(new_open),
+            busy=state.busy.at[bank].set(serv_end + reloc_cost),
+            fts=new_fts,
+            mshr_ring=state.mshr_ring.at[req.core,
+                                         state.mshr_idx[req.core]].set(done),
+            mshr_idx=state.mshr_idx.at[req.core].set(
+                (state.mshr_idx[req.core] + 1) % N_MSHR),
+            bus_free=done,
+        )
+
+        # ---- counters ------------------------------------------------------
+        act = (~row_hit).astype(jnp.int32)
+        lat_ns = ((done - t_ready) // 8).astype(jnp.int32)
+        cnt = Counters(
+            acts_slow=cnt.acts_slow + act * (~served_fast),
+            acts_fast=cnt.acts_fast + act * served_fast,
+            reads=cnt.reads + (~req.is_write).astype(jnp.int32),
+            writes=cnt.writes + req.is_write.astype(jnp.int32),
+            reloc_blocks=cnt.reloc_blocks + moved,
+            wb_blocks=cnt.wb_blocks + wb,
+            row_hits=cnt.row_hits + row_hit.astype(jnp.int32),
+            cache_hits=cnt.cache_hits + hit.astype(jnp.int32),
+            insertions=cnt.insertions + n_ins,
+            lat_sum_ns=cnt.lat_sum_ns.at[req.core].add(lat_ns),
+            req_cnt=cnt.req_cnt.at[req.core].add(1),
+            t_end=jnp.maximum(cnt.t_end, serv_end + reloc_cost),
+        )
+        return (state, cnt), None
+
+    return step
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def run_channel(trace: Trace, cfg: MechConfig) -> Counters:
+    """Simulate one channel's request stream."""
+    step = make_step(cfg)
+    carry0 = (init_state(cfg), init_counters())
+    (_, cnt), _ = jax.lax.scan(step, carry0, trace)
+    return cnt
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def run_channels(traces: Trace, cfg: MechConfig) -> Counters:
+    """Simulate C independent channels: traces leaves shaped (C, T)."""
+    step = make_step(cfg)
+
+    def one(tr):
+        carry0 = (init_state(cfg), init_counters())
+        (_, cnt), _ = jax.lax.scan(step, carry0, tr)
+        return cnt
+
+    return jax.vmap(one)(traces)

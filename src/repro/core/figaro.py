@@ -1,0 +1,75 @@
+"""FIGARO substrate — the data-plane relocation ops (paper §4), TPU-adapted.
+
+In DRAM, RELOC moves one column (rank-level: one 64 B cache block) between the
+local row buffers of two subarrays through the shared global row buffer, with
+*unaligned* src/dst column addressing and distance-independent latency.
+
+On TPU the analogous primitive is a fine-grained gather/scatter between a
+large HBM-resident "slow region" and a small contiguous "fast pool", executed
+by a DMA engine (the GRB analogue) without copying whole rows / tensors.
+These pure-jnp implementations are the semantic reference; the Pallas kernel
+in ``kernels/figaro_reloc`` implements the same contract with explicit
+HBM->VMEM BlockSpec tiling and is validated against this module.
+
+Layout convention:
+  slow:  (n_rows, segs_per_row, seg_elems, ...feat)  — the full data
+  fast:  (fast_rows, segs_per_row, seg_elems, ...feat) — the cache region
+A *segment id* linearizes (row, seg) as ``row * segs_per_row + seg``; a *slot*
+linearizes the fast pool the same way.  Both sides of a relocation may be
+unaligned (any segment -> any slot), mirroring RELOC's two column addresses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _flatten_segs(x: jax.Array) -> jax.Array:
+    """(rows, spr, seg, ...) -> (rows*spr, seg, ...)."""
+    return x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:])
+
+
+def reloc_in(slow: jax.Array, fast: jax.Array, seg_ids: jax.Array,
+             slots: jax.Array) -> jax.Array:
+    """Relocate segments slow[seg_ids] -> fast[slots] (cache fill).
+
+    seg_ids/slots: (n,) int32.  A negative seg_id is a no-op for that lane
+    (masked relocation — the simulator issues fixed-width batches).
+    """
+    sflat = _flatten_segs(slow)
+    fflat = _flatten_segs(fast)
+    take = sflat[jnp.clip(seg_ids, 0, sflat.shape[0] - 1)]
+    keep = fflat[jnp.clip(slots, 0, fflat.shape[0] - 1)]
+    ok = (seg_ids >= 0)
+    data = jnp.where(ok.reshape((-1,) + (1,) * (take.ndim - 1)), take, keep)
+    out = fflat.at[jnp.where(ok, slots, fflat.shape[0])].set(
+        data, mode="drop")
+    return out.reshape(fast.shape)
+
+
+def reloc_out(slow: jax.Array, fast: jax.Array, slots: jax.Array,
+              seg_ids: jax.Array) -> jax.Array:
+    """Write back segments fast[slots] -> slow[seg_ids] (dirty eviction)."""
+    sflat = _flatten_segs(slow)
+    fflat = _flatten_segs(fast)
+    data = fflat[jnp.clip(slots, 0, fflat.shape[0] - 1)]
+    ok = (seg_ids >= 0)
+    out = sflat.at[jnp.where(ok, seg_ids, sflat.shape[0])].set(
+        data, mode="drop")
+    return out.reshape(slow.shape)
+
+
+def gather_segments(slow: jax.Array, seg_ids: jax.Array) -> jax.Array:
+    """Read segments at block granularity (the READ path through the GRB)."""
+    sflat = _flatten_segs(slow)
+    return sflat[jnp.clip(seg_ids, 0, sflat.shape[0] - 1)]
+
+
+def reloc_cost_ns(n_segments: jax.Array, seg_blocks: int,
+                  timings=None) -> jax.Array:
+    """Model cost of relocating n segments with an already-open source row
+    (§8.1: the first ACTIVATE is elided on the miss path):
+    seg_blocks RELOCs + destination ACTIVATE."""
+    from repro.core.timing import DDR4
+    t = timings or DDR4
+    return n_segments * (seg_blocks * t.tRELOC + t.tRCD)

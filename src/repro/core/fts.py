@@ -1,0 +1,147 @@
+"""FIGCache Tag Store (FTS) — paper §5.1, as a pure-JAX state machine.
+
+The exact same structure drives (a) the cycle-approximate DRAM simulator
+(`core/dram.py`) and (b) the TPU-side FIGCache-KV segment cache
+(`figkv/kv_cache.py`): entries = {tag, valid, dirty, benefit}, fully
+associative within a bank, *insert-any-miss* insertion, and the paper's
+*RowBenefit* replacement (evict at row granularity: pick the cache row with
+the lowest summed benefit, mark all its segments in a bitvector, then refill
+marked slots lowest-benefit-first).  SegmentBenefit / LRU / Random
+alternatives implement Figure 14's comparison points.
+
+All ops are branchless (arithmetic select) so they jit/scan/vmap cleanly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BIG = jnp.int32(1 << 30)
+
+
+class FTS(NamedTuple):
+    tags: jax.Array      # (n_slots,) int32 — segment id, valid bit separate
+    valid: jax.Array     # (n_slots,) bool
+    dirty: jax.Array     # (n_slots,) bool
+    benefit: jax.Array   # (n_slots,) int32 — saturating counter
+    last_use: jax.Array  # (n_slots,) int32 — step stamp (LRU policy)
+    evict_row: jax.Array   # () int32 — row marked for eviction (-1: none)
+    evict_mask: jax.Array  # (segs_per_row,) bool — paper's bitvector
+    miss_tags: jax.Array   # (n_track,) int32 — insertion-threshold tracking
+    miss_cnt: jax.Array    # (n_track,) int32
+
+
+def init(n_slots: int, segs_per_row: int, n_track: int = 256) -> FTS:
+    return FTS(
+        tags=jnp.full((n_slots,), -1, jnp.int32),
+        valid=jnp.zeros((n_slots,), bool),
+        dirty=jnp.zeros((n_slots,), bool),
+        benefit=jnp.zeros((n_slots,), jnp.int32),
+        last_use=jnp.zeros((n_slots,), jnp.int32),
+        evict_row=jnp.int32(-1),
+        evict_mask=jnp.zeros((segs_per_row,), bool),
+        miss_tags=jnp.full((n_track,), -1, jnp.int32),
+        miss_cnt=jnp.zeros((n_track,), jnp.int32),
+    )
+
+
+def lookup(fts: FTS, seg: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """-> (hit: bool, slot: int32). slot undefined when !hit."""
+    m = (fts.tags == seg) & fts.valid
+    return jnp.any(m), jnp.argmax(m).astype(jnp.int32)
+
+
+def touch(fts: FTS, slot: jax.Array, is_write: jax.Array, step: jax.Array,
+          benefit_max: int) -> FTS:
+    """Cache hit: increment saturating benefit, set dirty on writes (§5.1)."""
+    b = jnp.minimum(fts.benefit[slot] + 1, benefit_max)
+    return fts._replace(
+        benefit=fts.benefit.at[slot].set(b),
+        dirty=fts.dirty.at[slot].set(fts.dirty[slot] | is_write),
+        last_use=fts.last_use.at[slot].set(step),
+    )
+
+
+def should_insert(fts: FTS, seg: jax.Array, threshold: int) -> Tuple[jax.Array, FTS]:
+    """Insertion policy (§9.4).  threshold=1 == insert-any-miss (default).
+
+    Higher thresholds track consecutive misses per segment in a small
+    direct-mapped counter table (the 'additional metadata' §9.4 mentions).
+    """
+    if threshold <= 1:
+        return jnp.bool_(True), fts
+    n = fts.miss_tags.shape[0]
+    idx = jnp.remainder(seg, n)
+    same = fts.miss_tags[idx] == seg
+    cnt = jnp.where(same, fts.miss_cnt[idx] + 1, 1)
+    fts = fts._replace(miss_tags=fts.miss_tags.at[idx].set(seg),
+                       miss_cnt=fts.miss_cnt.at[idx].set(cnt))
+    return cnt >= threshold, fts
+
+
+def _pick_victim_row_benefit(fts: FTS, segs_per_row: int):
+    """Paper §5.1 RowBenefit: row-granularity eviction with a bitvector."""
+    n_rows = fts.benefit.shape[0] // segs_per_row
+    need_new = (fts.evict_row < 0) | ~jnp.any(fts.evict_mask)
+    row_sum = fts.benefit.reshape(n_rows, segs_per_row).sum(axis=1)
+    new_row = jnp.argmin(row_sum).astype(jnp.int32)
+    row = jnp.where(need_new, new_row, fts.evict_row)
+    mask = jnp.where(need_new, jnp.ones_like(fts.evict_mask), fts.evict_mask)
+    row_benefit = jax.lax.dynamic_slice(
+        fts.benefit, (row * segs_per_row,), (segs_per_row,))
+    idx = jnp.argmin(jnp.where(mask, row_benefit, BIG)).astype(jnp.int32)
+    slot = row * segs_per_row + idx
+    mask = mask.at[idx].set(False)
+    return slot, fts._replace(evict_row=row, evict_mask=mask)
+
+
+def _pick_victim(fts: FTS, policy: str, segs_per_row: int, step: jax.Array):
+    if policy == "row_benefit":
+        return _pick_victim_row_benefit(fts, segs_per_row)
+    if policy == "segment_benefit":
+        return jnp.argmin(fts.benefit).astype(jnp.int32), fts
+    if policy == "lru":
+        return jnp.argmin(fts.last_use).astype(jnp.int32), fts
+    if policy == "random":
+        n = fts.tags.shape[0]
+        h = (step * jnp.int32(1103515245) + 12345) & jnp.int32(0x7FFFFFFF)
+        return jnp.remainder(h, n).astype(jnp.int32), fts
+    raise ValueError(f"unknown replacement policy {policy!r}")
+
+
+class InsertResult(NamedTuple):
+    fts: FTS
+    slot: jax.Array          # where the new segment landed
+    evicted_valid: jax.Array  # a valid entry was displaced
+    evicted_dirty: jax.Array  # ... and it was dirty (-> writeback RELOCs)
+    evicted_tag: jax.Array    # its segment id (for writeback addressing)
+
+
+def insert(fts: FTS, seg: jax.Array, is_write: jax.Array, step: jax.Array,
+           *, policy: str, segs_per_row: int, benefit_init: int = 1) -> InsertResult:
+    """Insert `seg` (on a miss): free slot if any, else policy victim."""
+    has_free = ~jnp.all(fts.valid)
+    free_slot = jnp.argmin(fts.valid).astype(jnp.int32)
+    victim_slot, fts_v = _pick_victim(fts, policy, segs_per_row, step)
+    # when a free slot exists, do not consume the eviction bitvector
+    fts = jax.tree.map(lambda a, b: jnp.where(has_free, a, b), fts, fts_v)
+    slot = jnp.where(has_free, free_slot, victim_slot)
+    ev_valid = fts.valid[slot] & ~has_free
+    ev_dirty = ev_valid & fts.dirty[slot]
+    ev_tag = fts.tags[slot]
+    fts = fts._replace(
+        tags=fts.tags.at[slot].set(seg),
+        valid=fts.valid.at[slot].set(True),
+        dirty=fts.dirty.at[slot].set(is_write),
+        benefit=fts.benefit.at[slot].set(benefit_init),
+        last_use=fts.last_use.at[slot].set(step),
+    )
+    return InsertResult(fts, slot, ev_valid, ev_dirty, ev_tag)
+
+
+def invalidate(fts: FTS, slot: jax.Array) -> FTS:
+    return fts._replace(valid=fts.valid.at[slot].set(False),
+                        dirty=fts.dirty.at[slot].set(False),
+                        benefit=fts.benefit.at[slot].set(0))

@@ -1,0 +1,143 @@
+"""Top-level FIGCache system simulator: six mechanisms, perf + energy metrics.
+
+Performance model (DESIGN.md §7): the trace replaces Pin, and per-core IPC is
+derived from the simulated average memory latency with an MLP-weighted
+latency-to-CPI conversion:
+
+    cycles_c = I_c * CPI_exec + N_c * L_c(cycles) / MLP_c
+    I_c      = N_c * 1000 / MPKI_c
+
+Single-core results report IPC speedup vs Base; multiprogrammed results report
+weighted speedup (paper §7, [133]).  Every mechanism sees the *same* trace, so
+speedups isolate the memory system exactly as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core import dram, traces
+from repro.core.energy import ENERGY
+from repro.core.timing import GEOM, MechConfig, paper_config
+
+CPU_GHZ = 3.2
+CPI_EXEC = 0.4          # 3-wide OoO issue
+MLP_INTENSIVE = 2.2     # 8 MSHRs/core, bursty misses overlap
+MLP_NON = 1.4
+
+PAPER_MECHS = ("base", "lisa_villa", "figcache_slow", "figcache_fast",
+               "figcache_ideal", "lldram")
+
+
+@dataclasses.dataclass
+class RunResult:
+    mechanism: str
+    ipc: np.ndarray              # per-core
+    avg_lat_ns: np.ndarray       # per-core
+    row_hit_rate: float
+    cache_hit_rate: float        # hits / lookups (cache mechanisms only)
+    exec_time_ns: float
+    dram_energy_nj: float
+    system_energy_nj: float
+    energy_parts: Dict[str, float]
+    counters: object
+
+
+def _per_core_latency(cnt) -> np.ndarray:
+    lat = np.asarray(cnt.lat_sum_ns, dtype=np.float64)
+    req = np.asarray(cnt.req_cnt, dtype=np.float64)
+    if lat.ndim == 2:            # (channels, cores) -> sum over channels
+        lat, req = lat.sum(0), req.sum(0)
+    return np.where(req > 0, lat / np.maximum(req, 1), 0.0), req
+
+
+def _ipc_model(avg_lat_ns, req, apps) -> np.ndarray:
+    ipcs = []
+    for c, a in enumerate(apps):
+        if req[c] == 0:
+            ipcs.append(1.0 / CPI_EXEC)
+            continue
+        instr = req[c] * 1000.0 / a.mpki
+        mlp = MLP_INTENSIVE if a.name in traces.INTENSIVE else MLP_NON
+        cycles = instr * CPI_EXEC + req[c] * (avg_lat_ns[c] * CPU_GHZ) / mlp
+        ipcs.append(instr / cycles)
+    return np.array(ipcs)
+
+
+def run_mechanism(trace: dram.Trace, cfg: MechConfig,
+                  apps: Sequence[traces.AppParams]) -> RunResult:
+    multi = np.asarray(trace.t_issue).ndim == 2
+    cnt = dram.run_channels(trace, cfg) if multi else dram.run_channel(trace, cfg)
+    n_channels = np.asarray(trace.t_issue).shape[0] if multi else 1
+    avg_lat, req = _per_core_latency(cnt)
+    ipc = _ipc_model(avg_lat, req, apps)
+    tot = lambda x: float(np.asarray(x).sum())
+    n_req = tot(cnt.reads) + tot(cnt.writes)
+    instr = sum(req[c] * 1000.0 / a.mpki for c, a in enumerate(apps))
+    # exec time: slowest core (ns)
+    times = []
+    for c, a in enumerate(apps):
+        if req[c] == 0:
+            continue
+        i = req[c] * 1000.0 / a.mpki
+        mlp = MLP_INTENSIVE if a.name in traces.INTENSIVE else MLP_NON
+        cyc = i * CPI_EXEC + req[c] * (avg_lat[c] * CPU_GHZ) / mlp
+        times.append(cyc / CPU_GHZ)
+    exec_ns = max(times)
+    parts = ENERGY.system_energy_nj(cnt, n_channels, len(apps), instr, exec_ns)
+    return RunResult(
+        mechanism=cfg.mechanism,
+        ipc=ipc,
+        avg_lat_ns=avg_lat,
+        row_hit_rate=tot(cnt.row_hits) / n_req,
+        cache_hit_rate=tot(cnt.cache_hits) / n_req if cfg.has_cache else 0.0,
+        exec_time_ns=exec_ns,
+        dram_energy_nj=parts["dram_total"],
+        system_energy_nj=parts["system_total"],
+        energy_parts=parts,
+        counters=cnt,
+    )
+
+
+def weighted_speedup(res: RunResult, base: RunResult) -> float:
+    return float(np.sum(res.ipc / base.ipc))
+
+
+@functools.lru_cache(maxsize=None)
+def _single_trace(app_name: str, n_reqs: int, seed: int):
+    a = traces.app_params(app_name)
+    return traces.build_trace([a], 1, n_reqs, seed), (a,)
+
+
+def run_single_core(app_name: str, mechanisms=PAPER_MECHS, n_reqs: int = 24576,
+                    seed: int = 1, cfg_overrides: dict | None = None
+                    ) -> Dict[str, RunResult]:
+    tr, apps = _single_trace(app_name, n_reqs, seed)
+    out = {}
+    for m in mechanisms:
+        cfg = paper_config(m, **(cfg_overrides or {})) if m != "base" \
+            else paper_config(m)
+        out[m] = run_mechanism(tr, cfg, apps)
+    return out
+
+
+def run_eight_core(workload, mechanisms=PAPER_MECHS, per_channel: int = 12288,
+                   seed: int = 2, cfg_overrides: dict | None = None
+                   ) -> Dict[str, RunResult]:
+    name, frac, apps = workload
+    tr = traces.build_trace(apps, 4, per_channel, seed)
+    out = {}
+    for m in mechanisms:
+        cfg = paper_config(m, **(cfg_overrides or {})) if m != "base" \
+            else paper_config(m)
+        out[m] = run_mechanism(tr, cfg, apps)
+    return out
+
+
+def speedup_summary(results: Dict[str, RunResult]) -> Dict[str, float]:
+    base = results["base"]
+    return {m: weighted_speedup(r, base) / len(base.ipc)
+            for m, r in results.items()}

@@ -1,0 +1,132 @@
+"""DRAM timing + geometry constants (paper Table 1 / §4.2).
+
+All latencies are stored in integer *ticks* of 1/8 ns so the jitted simulator
+runs on exact int32 arithmetic (float32 timestamps lose precision past ~16 ms).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+TICKS_PER_NS = 8
+
+
+def ns(x: float) -> int:
+    return int(round(x * TICKS_PER_NS))
+
+
+@dataclasses.dataclass(frozen=True)
+class DRAMTimings:
+    """DDR4-1600 (800 MHz bus) timings, ns — paper Table 1."""
+    tCK: float = 1.25
+    tRCD: float = 13.75
+    tRP: float = 13.75
+    tRAS: float = 35.0
+    tCAS: float = 13.75
+    tBL: float = 5.0          # 8-beat burst @ 1.6 GT/s
+    tCCD: float = 6.25
+    tRELOC: float = 1.0       # §4.2: 0.57 ns SPICE + 43 % guardband -> 1 ns
+    # Fast-subarray reductions (LISA-VILLA SPICE model, §7)
+    fast_tRCD_scale: float = 1.0 - 0.455
+    fast_tRP_scale: float = 1.0 - 0.382
+    fast_tRAS_scale: float = 1.0 - 0.629
+    # LISA inter-subarray hop (row-buffer movement between adjacent subarrays)
+    tLISA_HOP: float = 10.0
+
+    # -- tick helpers ------------------------------------------------------
+    @property
+    def rcd(self): return ns(self.tRCD)
+    @property
+    def rp(self): return ns(self.tRP)
+    @property
+    def ras(self): return ns(self.tRAS)
+    @property
+    def cas(self): return ns(self.tCAS)
+    @property
+    def bl(self): return ns(self.tBL)
+    @property
+    def ccd(self): return ns(self.tCCD)
+    @property
+    def reloc(self): return ns(self.tRELOC)
+    @property
+    def rcd_fast(self): return ns(self.tRCD * self.fast_tRCD_scale)
+    @property
+    def rp_fast(self): return ns(self.tRP * self.fast_tRP_scale)
+    @property
+    def ras_fast(self): return ns(self.tRAS * self.fast_tRAS_scale)
+    @property
+    def lisa_hop(self): return ns(self.tLISA_HOP)
+
+    def full_reloc_ns(self) -> float:
+        """One isolated column relocation: ACT(src,tRAS) + RELOC + ACT(dst,
+        counted as tRCD) + PRE (tRP).  Paper §4.2: 63.5 ns."""
+        return self.tRAS + self.tRELOC + self.tRCD + self.tRP
+
+
+DDR4 = DRAMTimings()
+
+
+@dataclasses.dataclass(frozen=True)
+class DRAMGeometry:
+    """Per-channel geometry — paper Table 1 (4 GB/channel)."""
+    n_banks: int = 16              # 4 bank groups x 4 banks
+    n_rows: int = 32768            # per bank -> 16 * 32768 * 8 kB = 4 GB
+    row_blocks: int = 128          # 8 kB row / 64 B cache block
+    rows_per_subarray: int = 512   # -> 64 subarrays per bank
+    n_cores: int = 8
+
+    @property
+    def n_subarrays(self) -> int:
+        return self.n_rows // self.rows_per_subarray
+
+
+GEOM = DRAMGeometry()
+
+
+MECHANISMS = ("base", "lisa_villa", "figcache_slow", "figcache_fast",
+              "figcache_ideal", "lldram")
+
+
+@dataclasses.dataclass(frozen=True)
+class MechConfig:
+    """One evaluated system configuration (paper §8)."""
+    mechanism: str = "figcache_fast"
+    seg_blocks: int = 16           # row segment = 16 blocks = 1/8 row
+    cache_rows: int = 64           # rows in the in-DRAM cache region (per bank)
+    policy: str = "row_benefit"    # row_benefit|segment_benefit|lru|random
+    insert_threshold: int = 1      # consecutive misses before insertion
+    benefit_bits: int = 5
+
+    def __post_init__(self):
+        assert self.mechanism in MECHANISMS, self.mechanism
+
+    @property
+    def has_cache(self) -> bool:
+        return self.mechanism in ("lisa_villa", "figcache_slow",
+                                  "figcache_fast", "figcache_ideal")
+
+    @property
+    def fast_cache(self) -> bool:
+        """Cache rows live in fast subarrays (reduced timings)?"""
+        return self.mechanism in ("lisa_villa", "figcache_fast",
+                                  "figcache_ideal")
+
+    @property
+    def segs_per_row(self) -> int:
+        return GEOM.row_blocks // self.seg_blocks
+
+    @property
+    def n_slots(self) -> int:
+        return self.cache_rows * self.segs_per_row
+
+    @property
+    def free_reloc(self) -> bool:
+        return self.mechanism == "figcache_ideal"
+
+
+def paper_config(mechanism: str, **kw) -> MechConfig:
+    """The exact §8 configurations."""
+    if mechanism == "lisa_villa":
+        # whole-row caching, 512 cache rows (16 fast subarrays x 32 rows)
+        kw.setdefault("seg_blocks", GEOM.row_blocks)
+        kw.setdefault("cache_rows", 512)
+    return MechConfig(mechanism=mechanism, **kw)

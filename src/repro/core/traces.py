@@ -1,0 +1,231 @@
+"""Synthetic memory-trace generation (paper §7 workloads).
+
+The paper drives Ramulator with Pin traces of 20 applications (Table 2).
+Those traces are not distributed, so we synthesize parameterized streams that
+preserve the properties the mechanisms are sensitive to:
+
+ * page (row) popularity skew          — bounded-Zipf over a working set;
+ * *segment* locality within a row     — each page has 1-2 hot row segments
+                                          out of 8 (the paper's central
+                                          observation: most of a cached row is
+                                          never touched);
+ * row-visit run length                — few accesses per activation
+                                          (FR-FCFS-preserved runs);
+ * memory intensity (MPKI)             — arrival rate + IPC-model weight;
+ * multiprogrammed interference        — 8 merged streams hashed across
+                                          4 channels / 16 banks.
+
+Each application name from Table 2 maps to a deterministic parameter tuple
+(jittered by a name hash) so per-app variation resembles a real study.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+from repro.core.dram import Trace
+from repro.core.timing import GEOM, TICKS_PER_NS
+
+INTENSIVE = ["zeusmp", "leslie3d", "mcf", "GemsFDTD", "libquantum",
+             "bwaves", "lbm", "com", "tigr", "mum"]
+NON_INTENSIVE = ["h264ref", "bzip2", "gromacs", "gcc", "bfssandy",
+                 "grep", "wc-8443", "sjeng", "tpcc64", "tpch2"]
+ALL_APPS = INTENSIVE + NON_INTENSIVE
+
+
+@dataclasses.dataclass(frozen=True)
+class AppParams:
+    name: str
+    mpki: float
+    n_pages: int          # working-set size in DRAM rows
+    zipf_a: float         # popularity skew
+    visit_mean: float     # accesses per row visit (one context)
+    hot_segs: int         # hot segments per page (of row_blocks/16)
+    rw: float             # write fraction
+    interarrival_ns: float
+    contexts: int         # concurrently-live miss streams (MSHR/MLP effect)
+    burst: int            # requests issued back-to-back per CPU episode
+    window: int           # active working-set window (temporally-grouped pages)
+    refresh: float        # per-request probability of window turnover
+    stream_frac: float    # fraction of contexts that stream fresh pages
+                          # (sequential, no reuse -> caching can't help)
+
+
+def _h(name: str, lo: float, hi: float, salt: str = "") -> float:
+    x = int(hashlib.md5((name + salt).encode()).hexdigest()[:8], 16)
+    return lo + (hi - lo) * (x / 0xFFFFFFFF)
+
+
+def app_params(name: str) -> AppParams:
+    intensive = name in INTENSIVE
+    if intensive:
+        return AppParams(
+            name=name,
+            mpki=_h(name, 15.0, 45.0, "m"),
+            n_pages=int(_h(name, 1500, 5000, "p")),
+            zipf_a=_h(name, 0.9, 1.25, "z"),
+            visit_mean=_h(name, 1.2, 2.0, "v"),
+            hot_segs=1 if _h(name, 0, 1, "s") < 0.7 else 2,
+            rw=_h(name, 0.15, 0.35, "w"),
+            interarrival_ns=_h(name, 22.0, 48.0, "i"),
+            contexts=4,
+            burst=3,
+            window=int(_h(name, 32, 64, "W")),
+            refresh=_h(name, 0.01, 0.04, "r"),
+            stream_frac=_h(name, 0.12, 0.28, "f"),
+        )
+    return AppParams(
+        name=name,
+        mpki=_h(name, 1.0, 8.0, "m"),
+        n_pages=int(_h(name, 300, 1200, "p")),
+        zipf_a=_h(name, 1.0, 1.4, "z"),
+        visit_mean=_h(name, 2.5, 5.0, "v"),
+        hot_segs=1,
+        rw=_h(name, 0.1, 0.3, "w"),
+        interarrival_ns=_h(name, 300.0, 700.0, "i"),
+        contexts=2,
+        burst=1,
+        window=16,
+        refresh=0.01,
+        stream_frac=0.15,
+    )
+
+
+def _zipf_probs(n_pages: int, a: float):
+    ranks = np.arange(1, n_pages + 1, dtype=np.float64)
+    p = ranks ** (-a)
+    return p / p.sum()
+
+
+def gen_core_stream(app: AppParams, core: int, n_reqs: int, seed: int,
+                    n_channels: int):
+    """One core's request stream: (t_ns, channel, bank, row, col, wr, core).
+
+    Models an OoO core with `contexts` concurrently-live miss streams (MSHR
+    parallelism): each emitted request comes from a random live context, so
+    row visits from different pages interleave — exactly the effect that
+    limits row-buffer locality and that FIGCache's segment co-location
+    recovers (paper §1, §3).  Contexts draw pages from a slowly-turning
+    *active window* (working-set phase), so temporally-close pages are
+    re-visited together — the locality structure RowBenefit eviction is
+    designed around (§5.1).  Requests arrive in bursts of `burst`.
+    """
+    rng = np.random.default_rng(seed)
+    probs = _zipf_probs(app.n_pages, app.zipf_a)
+    draws = rng.choice(app.n_pages, size=n_reqs + 4 * app.window + 64, p=probs)
+    pi = 0
+    segs_per_row = GEOM.row_blocks // 16
+    window = list(draws[:app.window]); pi = app.window
+    cursor = 0
+
+    def new_ctx():
+        nonlocal pi, cursor
+        if rng.random() < app.stream_frac and pi < len(draws):
+            # streaming: a fresh page swept sequentially, never revisited
+            page = int(draws[pi]) + app.n_pages  # outside the reuse set
+            pi += 1
+            visit = 4 + int(rng.integers(0, 3))
+            prim = int(rng.integers(0, segs_per_row))
+            return {"page": page, "left": visit, "prim": prim, "sec": prim,
+                    "start": int(rng.integers(0, 16)), "v": 0}
+        # sweep the working set coherently (blocked-algorithm phase
+        # behavior): revisit order matches prior visit order, which is the
+        # temporal structure RowBenefit co-location exploits (§5.1)
+        if rng.random() < 0.7:
+            page = int(window[cursor % len(window)])
+            cursor += 1
+        else:
+            page = int(window[int(rng.integers(0, len(window)))])
+        visit = 1 + int(rng.geometric(1.0 / app.visit_mean))
+        prim = (page * 97) % segs_per_row
+        sec = (prim + 1 + (page * 31) % (segs_per_row - 1)) % segs_per_row
+        return {"page": page, "left": visit, "prim": prim, "sec": sec,
+                "start": int(rng.integers(0, 16)), "v": 0}
+
+    ctxs = [new_ctx() for _ in range(app.contexts)]
+    out = np.empty((n_reqs, 6), dtype=np.float64)
+    t = rng.exponential(app.interarrival_ns)
+    n = 0
+    while n < n_reqs:
+        for _ in range(app.burst):
+            if n >= n_reqs:
+                break
+            k = int(rng.integers(0, len(ctxs)))
+            c = ctxs[k]
+            page = c["page"]
+            seg = c["prim"] if (app.hot_segs == 1 or rng.random() < 0.8) \
+                else c["sec"]
+            col = seg * 16 + (c["start"] + c["v"]) % 16
+            phys = page + core * 100003       # per-core physical allocation
+            ch = (phys * 2654435761 >> 8) % n_channels
+            bank = (phys * 2246822519 >> 12) % GEOM.n_banks
+            row = (phys * 40503) % GEOM.n_rows
+            out[n] = (t, ch, bank, row, col, rng.random() < app.rw)
+            n += 1
+            c["v"] += 1
+            c["left"] -= 1
+            if c["left"] <= 0:
+                ctxs[k] = new_ctx()
+            if rng.random() < app.refresh and pi < len(draws):  # phase drift
+                window[int(rng.integers(0, len(window)))] = int(draws[pi])
+                pi += 1
+        t += rng.exponential(app.interarrival_ns * app.burst)
+    return (out[:, 0], out[:, 1].astype(np.int64), out[:, 2].astype(np.int64),
+            out[:, 3].astype(np.int64), out[:, 4].astype(np.int64),
+            out[:, 5] > 0.5, np.full(n_reqs, core))
+
+
+def build_trace(apps, n_channels: int, per_channel: int, seed: int = 0):
+    """Merge per-core streams into per-channel, time-sorted Trace arrays.
+
+    apps: list of AppParams, one per core.  Returns (Trace with (C, T) leaves,
+    per-core request counts actually kept).
+    """
+    total = n_channels * per_channel
+    per_core = total // len(apps) + per_channel
+    streams = [gen_core_stream(a, c, per_core, seed * 1000 + c, n_channels)
+               for c, a in enumerate(apps)]
+    t = np.concatenate([s[0] for s in streams])
+    ch = np.concatenate([s[1] for s in streams])
+    bank = np.concatenate([s[2] for s in streams])
+    row = np.concatenate([s[3] for s in streams])
+    col = np.concatenate([s[4] for s in streams])
+    wr = np.concatenate([s[5] for s in streams])
+    core = np.concatenate([s[6] for s in streams])
+
+    chans = []
+    for c in range(n_channels):
+        m = ch == c
+        order = np.argsort(t[m], kind="stable")[:per_channel]
+        if order.size < per_channel:  # repeat tail to keep rectangular
+            order = np.pad(order, (0, per_channel - order.size), mode="edge")
+        ticks = (t[m][order] * TICKS_PER_NS).astype(np.int32)
+        chans.append((ticks, bank[m][order].astype(np.int32),
+                      row[m][order].astype(np.int32),
+                      col[m][order].astype(np.int32),
+                      wr[m][order], core[m][order].astype(np.int32)))
+    tr = Trace(
+        t_issue=np.stack([c[0] for c in chans]),
+        bank=np.stack([c[1] for c in chans]),
+        row=np.stack([c[2] for c in chans]),
+        col=np.stack([c[3] for c in chans]),
+        is_write=np.stack([c[4] for c in chans]),
+        core=np.stack([c[5] for c in chans]),
+    )
+    return tr
+
+
+def eight_core_workloads():
+    """20 multiprogrammed mixes: 5 each at 25/50/75/100 % memory-intensive."""
+    rng = np.random.default_rng(7)
+    out = []
+    for frac, n_int in [(25, 2), (50, 4), (75, 6), (100, 8)]:
+        for w in range(5):
+            ints = list(rng.choice(INTENSIVE, n_int, replace=False))
+            nons = list(rng.choice(NON_INTENSIVE, 8 - n_int, replace=False))
+            names = ints + nons
+            rng.shuffle(names)
+            out.append((f"W{frac}-{w}", frac, [app_params(n) for n in names]))
+    return out

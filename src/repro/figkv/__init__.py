@@ -1,0 +1,4 @@
+from repro.figkv.kv_cache import (FigKVState, figkv_init, figkv_prefill,
+                                  figkv_decode_step)  # noqa: F401
+from repro.figkv.embed_cache import EmbedCache, embed_cache_init, \
+    embed_cache_lookup  # noqa: F401

@@ -1,0 +1,76 @@
+"""FIGCache for embedding-table gathers (FIGCache-Slow analogue).
+
+Large vocabularies (152 k rows) are gathered token-by-token; hot vocabulary
+*segments* (``seg_tokens`` consecutive rows) are kept in a small contiguous
+fast table managed by the same FTS + insert-any-miss + RowBenefit machinery.
+On TPU this converts scattered HBM reads into mostly-sequential reads of a
+small hot table (the row-buffer-hit analogue) — applicable to *every* arch
+including attention-free RWKV (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import FIGKVConfig
+from repro.core import fts as fts_lib
+
+
+class EmbedCache(NamedTuple):
+    fast: jax.Array      # (slots, seg_rows, d) hot vocabulary segments
+    fts: fts_lib.FTS
+    hits: jax.Array      # () int32 — telemetry
+    lookups: jax.Array
+
+
+def embed_cache_init(d: int, fig: FIGKVConfig, dtype=jnp.bfloat16
+                     ) -> EmbedCache:
+    slots = fig.fast_rows * fig.segs_per_row
+    return EmbedCache(
+        fast=jnp.zeros((slots, fig.seg_tokens, d), dtype),
+        fts=fts_lib.init(slots, fig.segs_per_row),
+        hits=jnp.int32(0), lookups=jnp.int32(0))
+
+
+def embed_cache_lookup(cache: EmbedCache, table: jax.Array,
+                       tokens: jax.Array, fig: FIGKVConfig, step
+                       ) -> Tuple[EmbedCache, jax.Array]:
+    """tokens (T,) -> embeddings (T, d); serves hot segments from the fast
+    table, misses from the big table + inserts the hottest missed segment."""
+    T = tokens.shape[0]
+    st = fig.seg_tokens
+    segs = tokens // st
+    offs = tokens % st
+
+    def look(s):
+        return fts_lib.lookup(cache.fts, s)
+    hit, slot = jax.vmap(look)(segs)
+
+    from_fast = cache.fast[jnp.where(hit, slot, 0), jnp.where(hit, offs, 0)]
+    from_slow = table[tokens]
+    out = jnp.where(hit[:, None], from_fast.astype(from_slow.dtype), from_slow)
+
+    # touch all hits; insert the most frequent missed segment this batch
+    fts = cache.fts
+    bmax = (1 << fig.benefit_bits) - 1
+    for i in range(min(T, 64)):     # bounded unroll for big batches
+        fts = jax.lax.cond(
+            hit[i], lambda f: fts_lib.touch(f, slot[i], jnp.bool_(False),
+                                            jnp.int32(step), bmax),
+            lambda f: f, fts)
+    missed = jnp.where(hit, -1, segs)
+    any_miss = jnp.any(missed >= 0)
+    ins_seg = missed[jnp.argmax(missed >= 0)]
+    res = fts_lib.insert(fts, ins_seg, jnp.bool_(False), jnp.int32(step),
+                         policy=fig.policy, segs_per_row=fig.segs_per_row)
+    fts = jax.tree.map(lambda a, b: jnp.where(any_miss, a, b), res.fts, fts)
+    seg_rows = jax.lax.dynamic_slice_in_dim(
+        table, jnp.maximum(ins_seg, 0) * st, st, 0)
+    fast = cache.fast.at[jnp.where(any_miss, res.slot, 0)].set(
+        jnp.where(any_miss, seg_rows.astype(cache.fast.dtype),
+                  cache.fast[jnp.where(any_miss, res.slot, 0)]))
+    return EmbedCache(fast=fast, fts=fts,
+                      hits=cache.hits + hit.sum(dtype=jnp.int32),
+                      lookups=cache.lookups + T), out

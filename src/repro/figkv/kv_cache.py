@@ -1,0 +1,239 @@
+"""FIGCache-KV: the paper's fine-grained in-DRAM cache lifted to the TPU KV
+cache (DESIGN.md §2B).
+
+Mapping (paper -> here):
+  DRAM row segment (16 blocks)   -> KV segment (``seg_tokens`` tokens)
+  slow subarrays                 -> the full HBM KV pool (B, S, Hkv, D)
+  fast subarrays (64 rows x 8)   -> contiguous fast pool
+                                    (B, fast_rows*segs_per_row slots)
+  RELOC via global row buffer    -> segment gather HBM->fast pool
+                                    (``core/figaro.reloc_in``; Pallas kernel
+                                    in ``kernels/figaro_reloc``)
+  FTS {tag,valid,dirty,benefit}  -> identical structure (``core/fts``),
+                                    vmapped over the batch
+  insert-any-miss                -> top-scoring selected-but-uncached segment
+                                    is relocated each step
+  RowBenefit row eviction        -> identical (co-locates temporally close
+                                    segments in one fast row -> streaming)
+
+Decode attends over (selected hot segments ∪ recent window): with
+``n_sel * seg_tokens + recent  <<  S`` this is the sub-quadratic long-context
+path; with n_sel covering all segments it is *exactly* full attention (the
+correctness oracle used in tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import FIGKVConfig
+from repro.core import fts as fts_lib
+from repro.models.attention import attend
+
+
+class FigKVState(NamedTuple):
+    pool_k: jax.Array     # (B, Smax, Hkv, D)  slow region
+    pool_v: jax.Array
+    seg_key: jax.Array    # (B, n_segs, Hkv, D) f32 — per-segment key mean*cnt
+    fast_k: jax.Array     # (B, slots, seg_tokens, Hkv, D) fast pool
+    fast_v: jax.Array
+    fts: fts_lib.FTS      # leaves with leading (B,)
+    length: jax.Array     # () int32
+
+
+def figkv_init(batch: int, s_max: int, hkv: int, d: int,
+               fig: FIGKVConfig, dtype=jnp.bfloat16) -> FigKVState:
+    n_segs = s_max // fig.seg_tokens
+    slots = fig.fast_rows * fig.segs_per_row
+    one = fts_lib.init(slots, fig.segs_per_row)
+    fts = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (batch,) + a.shape).copy(), one)
+    return FigKVState(
+        pool_k=jnp.zeros((batch, s_max, hkv, d), dtype),
+        pool_v=jnp.zeros((batch, s_max, hkv, d), dtype),
+        seg_key=jnp.zeros((batch, n_segs, hkv, d), jnp.float32),
+        fast_k=jnp.zeros((batch, slots, fig.seg_tokens, hkv, d), dtype),
+        fast_v=jnp.zeros((batch, slots, fig.seg_tokens, hkv, d), dtype),
+        fts=fts,
+        length=jnp.int32(0),
+    )
+
+
+def figkv_prefill(state: FigKVState, k: jax.Array, v: jax.Array
+                  ) -> FigKVState:
+    """Fill the slow pool with prompt KV (B, S, Hkv, D) and build segment
+    summaries.  The fast pool starts cold (insert-any-miss warms it)."""
+    B, S, Hkv, D = k.shape
+    st = state.pool_k.shape[1] // state.seg_key.shape[1]
+    pool_k = jax.lax.dynamic_update_slice(state.pool_k, k.astype(state.pool_k.dtype),
+                                          (0, 0, 0, 0))
+    pool_v = jax.lax.dynamic_update_slice(state.pool_v, v.astype(state.pool_v.dtype),
+                                          (0, 0, 0, 0))
+    n_full = S // st
+    seg_sum = k[:, :n_full * st].reshape(B, n_full, st, Hkv, D).astype(
+        jnp.float32).sum(axis=2)
+    seg_key = state.seg_key.at[:, :n_full].set(seg_sum)
+    rem = S - n_full * st
+    if rem:
+        tail = k[:, n_full * st:].astype(jnp.float32).sum(axis=1)
+        seg_key = seg_key.at[:, n_full].set(tail)
+    return state._replace(pool_k=pool_k, pool_v=pool_v, seg_key=seg_key,
+                          length=jnp.int32(S))
+
+
+def _select_segments(q: jax.Array, seg_key: jax.Array, n_live: jax.Array,
+                     n_sel: int) -> jax.Array:
+    """Quest-style segment scoring: score = max_h q·seg_key_mean.
+    q (B,1,H,D) -> (B, n_sel) segment ids (may include dead ids; masked)."""
+    B, _, H, D = q.shape
+    Hkv = seg_key.shape[2]
+    rep = H // Hkv
+    qh = q[:, 0].reshape(B, Hkv, rep, D).astype(jnp.float32)
+    s = jnp.einsum("bhrd,bshd->bsr", qh, seg_key).max(axis=-1)  # (B, n_segs)
+    live = jnp.arange(s.shape[1])[None, :] < n_live
+    s = jnp.where(live, s, -jnp.inf)
+    _, idx = jax.lax.top_k(s, n_sel)
+    return idx.astype(jnp.int32)
+
+
+def _gather_segment(pool_k, pool_v, seg, seg_tokens):
+    k = jax.lax.dynamic_slice_in_dim(pool_k, seg * seg_tokens, seg_tokens, 0)
+    v = jax.lax.dynamic_slice_in_dim(pool_v, seg * seg_tokens, seg_tokens, 0)
+    return k, v
+
+
+def _fts_step(fts_b, segs, step, fig: FIGKVConfig):
+    """Per-sequence FTS transaction for the selected segments:
+    touch hits; insert the best-scoring miss (RowBenefit eviction).
+    Returns (fts, hit_mask, slot_per_seg, inserted_seg, inserted_slot)."""
+    def look(s):
+        return fts_lib.lookup(fts_b, s)
+    hits, slots = jax.vmap(look)(segs)
+    for i in range(segs.shape[0]):
+        fts_b = jax.lax.cond(
+            hits[i],
+            lambda f: fts_lib.touch(f, slots[i], jnp.bool_(False), step,
+                                    (1 << fig.benefit_bits) - 1),
+            lambda f: f, fts_b)
+    # insert-any-miss: the top-scoring miss is relocated this step
+    miss_order = jnp.argmax(~hits)          # segs sorted by score already
+    any_miss = ~jnp.all(hits)
+    ins_seg = jnp.where(any_miss, segs[miss_order], -1)
+    res = fts_lib.insert(fts_b, ins_seg, jnp.bool_(False), step,
+                         policy=fig.policy, segs_per_row=fig.segs_per_row)
+    fts_b = jax.tree.map(lambda a, b: jnp.where(any_miss, a, b),
+                         res.fts, fts_b)
+    ins_slot = jnp.where(any_miss, res.slot, -1)
+    slots = jnp.where(segs == ins_seg, ins_slot, jnp.where(hits, slots, -1))
+    return fts_b, slots, ins_seg, ins_slot
+
+
+def figkv_decode_step(state: FigKVState, q: jax.Array, k_new: jax.Array,
+                      v_new: jax.Array, fig: FIGKVConfig, *,
+                      n_sel: int = 16, recent: int = 64
+                      ) -> Tuple[FigKVState, jax.Array]:
+    """One decode step.  q (B,1,H,D); k_new/v_new (B,1,Hkv,D).
+
+    Returns (state', attention output (B,1,H,D)).
+    """
+    assert recent >= 2 * fig.seg_tokens, \
+        "recent window must cover the active (uncacheable) segment"
+    B, _, H, D = q.shape
+    Hkv = k_new.shape[2]
+    st = fig.seg_tokens
+    pos = state.length
+    # -- append token to the slow pool + segment summary ------------------
+    pool_k = jax.lax.dynamic_update_slice(
+        state.pool_k, k_new.astype(state.pool_k.dtype), (0, pos, 0, 0))
+    pool_v = jax.lax.dynamic_update_slice(
+        state.pool_v, v_new.astype(state.pool_v.dtype), (0, pos, 0, 0))
+    seg_of_pos = pos // st
+    seg_key = state.seg_key.at[:, seg_of_pos].add(
+        k_new[:, 0].astype(jnp.float32))
+    # only COMPLETE segments are cacheable: the active segment still mutates
+    # (a relocated copy would go stale — the paper's dirty/coherence rule);
+    # its tokens are always covered exactly by the recent window
+    n_live = (pos + 1) // st
+
+    # -- segment selection (exclude the recent window's segments: always
+    #    attended exactly) --------------------------------------------------
+    sel = _select_segments(q, seg_key, n_live, n_sel)          # (B, n_sel)
+
+    # -- FTS transaction, vmapped over the batch ---------------------------
+    step_id = pos.astype(jnp.int32)
+
+    def fts_tx(fts_b, segs):
+        return _fts_step(fts_b, segs, step_id, fig)
+
+    fts, slots, ins_seg, ins_slot = jax.vmap(fts_tx)(state.fts, sel)
+
+    # -- RELOC: move the inserted segment into the fast pool ---------------
+    def reloc_one(fk, fv, pk, pv, seg, slot):
+        kseg, vseg = _gather_segment(pk, pv, jnp.maximum(seg, 0), st)
+        ok = (seg >= 0) & (slot >= 0)
+        sl = jnp.where(ok, slot, 0)
+        fk = fk.at[sl].set(jnp.where(ok, kseg, fk[sl]))
+        fv = fv.at[sl].set(jnp.where(ok, vseg, fv[sl]))
+        return fk, fv
+
+    fast_k, fast_v = jax.vmap(reloc_one)(
+        state.fast_k, state.fast_v, pool_k, pool_v, ins_seg, ins_slot)
+
+    # -- gather selected segments: fast pool when cached, slow pool else ---
+    def fetch(pk, pv, fk, fv, segs, slts):
+        def one(seg, slot):
+            k_slow, v_slow = _gather_segment(pk, pv, jnp.maximum(seg, 0), st)
+            use_fast = slot >= 0
+            sl = jnp.where(use_fast, slot, 0)
+            k = jnp.where(use_fast, fk[sl], k_slow)
+            v = jnp.where(use_fast, fv[sl], v_slow)
+            return k, v
+        ks, vs = jax.vmap(one)(segs, slts)                     # (n_sel,st,..)
+        return ks, vs
+
+    ks, vs = jax.vmap(fetch)(pool_k, pool_v, fast_k, fast_v, sel, slots)
+    # (B, n_sel, st, Hkv, D) -> (B, n_sel*st, Hkv, D)
+    ks = ks.reshape(B, n_sel * st, Hkv, D)
+    vs = vs.reshape(B, n_sel * st, Hkv, D)
+
+    # -- recent window (exact) ---------------------------------------------
+    smax = state.pool_k.shape[1]
+    start = jnp.clip(pos + 1 - recent, 0, smax - recent)
+    rk = jax.lax.dynamic_slice_in_dim(pool_k, start, recent, 1)
+    rv = jax.lax.dynamic_slice_in_dim(pool_v, start, recent, 1)
+
+    # -- masks: selected segment tokens valid if < length+1 and not inside
+    #    the recent window (avoid double counting) -------------------------
+    sel_tok_pos = (sel[..., None] * st + jnp.arange(st)).reshape(B, n_sel * st)
+    sel_valid = jnp.broadcast_to(sel[..., None] >= 0,
+                                 (B, n_sel, st)).reshape(B, n_sel * st)
+    sel_valid = sel_valid & (sel_tok_pos <= pos) & (sel_tok_pos < start)
+    rec_pos = start + jnp.arange(recent)
+    rec_valid = jnp.broadcast_to((rec_pos <= pos)[None], (B, recent))
+
+    k_all = jnp.concatenate([ks, rk.astype(ks.dtype)], axis=1)
+    v_all = jnp.concatenate([vs, rv.astype(vs.dtype)], axis=1)
+    valid = jnp.concatenate([sel_valid, rec_valid], axis=1)    # (B, L)
+
+    rep = H // Hkv
+    kr = jnp.repeat(k_all, rep, axis=2)
+    vr = jnp.repeat(v_all, rep, axis=2)
+    out = _masked_attend(q, kr, vr, valid)
+
+    new_state = FigKVState(pool_k=pool_k, pool_v=pool_v, seg_key=seg_key,
+                           fast_k=fast_k, fast_v=fast_v, fts=fts,
+                           length=pos + 1)
+    return new_state, out
+
+
+def _masked_attend(q, k, v, valid):
+    """q (B,1,H,D), k/v (B,L,H,D), valid (B,L) -> (B,1,H,D), f32 softmax."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (q.shape[-1] ** -0.5)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,36 @@
+"""jit'd wrapper for FIGARO RELOC over model-shaped tensors."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.figaro_reloc.figaro_reloc import reloc
+from repro.kernels.figaro_reloc.ref import reloc_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def reloc_segments(pool: jax.Array, fast: jax.Array, src_segs: jax.Array,
+                   dst_slots: jax.Array, *, interpret: bool = False):
+    """pool (n_segs, *seg_shape) -> fast (n_slots, *seg_shape) relocation.
+
+    Flattens segment payloads to 2D for the kernel; negative src = no-op.
+    """
+    n_segs = pool.shape[0]
+    n_slots = fast.shape[0]
+    E = 1
+    for d in pool.shape[1:]:
+        E *= int(d)
+    p2 = pool.reshape(n_segs, E)
+    f2 = fast.reshape(n_slots, E)
+    if _on_tpu() or interpret:
+        out = reloc(p2, f2, src_segs, dst_slots,
+                    interpret=interpret or not _on_tpu())
+    else:
+        out = reloc_ref(p2, f2, src_segs, dst_slots)
+    return out.reshape(fast.shape)

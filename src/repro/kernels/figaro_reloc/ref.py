@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the FIGARO RELOC kernel (mirrors core/figaro.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reloc_ref(pool: jax.Array, fast: jax.Array, src_segs: jax.Array,
+              dst_slots: jax.Array) -> jax.Array:
+    """fast[dst_slots[i]] <- pool[src_segs[i]].
+
+    pool (n_segs, seg_elems), fast (n_slots, seg_elems); ids (n_moves,) int32.
+    Negative src id = masked no-op lane (like a RELOC without chip-select).
+    """
+    ok = src_segs >= 0
+    data = pool[jnp.clip(src_segs, 0, pool.shape[0] - 1)]
+    keep = fast[jnp.clip(dst_slots, 0, fast.shape[0] - 1)]
+    data = jnp.where(ok[:, None], data, keep)
+    return fast.at[jnp.where(ok, dst_slots, fast.shape[0])].set(
+        data, mode="drop")

@@ -1,0 +1,32 @@
+"""jit'd wrapper: FIGCache-KV decode attention over model-layout tensors."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.figcache_decode.figcache_decode import figcache_decode
+from repro.kernels.figcache_decode.ref import figcache_decode_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attend(q: jax.Array, k: jax.Array, v: jax.Array,
+                  valid: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """q (B,1,H,D); k/v (B,L,H,D) (heads repeated); valid (B,L) -> (B,1,H,D)."""
+    B, _, H, D = q.shape
+    L = k.shape[1]
+    qf = q[:, 0].reshape(B * H, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, L, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, L, D)
+    if _on_tpu() or interpret:
+        of = figcache_decode(qf, kf, vf, valid, heads_per_seq=H,
+                             interpret=interpret or not _on_tpu())
+    else:
+        vexp = jnp.repeat(valid, H, axis=0)
+        of = figcache_decode_ref(qf, kf, vf, vexp)
+    return of.reshape(B, H, D)[:, None].transpose(0, 1, 2, 3).reshape(B, 1, H, D)

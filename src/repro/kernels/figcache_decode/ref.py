@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the figcache_decode kernel (masked flash decode)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def figcache_decode_ref(q, k, v, valid):
+    """q (BH, D); k/v (BH, L, D); valid (BH, L) -> (BH, D)."""
+    s = jnp.einsum("bd,bkd->bk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (q.shape[-1] ** -0.5)
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bk,bkd->bd", p, v.astype(jnp.float32)).astype(q.dtype)

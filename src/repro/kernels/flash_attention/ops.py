@@ -1,0 +1,36 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+``mha(q, k, v)`` takes model-layout (B, S, H, D) tensors (kv heads already
+repeated), flattens to (B*H, S, D) for the kernel, and falls back to the
+pure-jnp reference on non-TPU backends (the kernel itself is validated in
+interpret mode by the test suite).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+        window: int = 0, interpret: bool = False) -> jax.Array:
+    """q/k/v (B, S, H, D) -> (B, S, H, D)."""
+    B, S, H, D = q.shape
+    def flat(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    qf, kf, vf = flat(q), flat(k), flat(v)
+    if _on_tpu() or interpret:
+        of = flash_attention(qf, kf, vf, causal=causal, window=window,
+                             interpret=interpret or not _on_tpu())
+    else:
+        of = flash_attention_ref(qf, kf, vf, causal=causal, window=window)
+    return of.reshape(B, H, S, D).transpose(0, 2, 1, 3)

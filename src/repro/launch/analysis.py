@@ -1,0 +1,233 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+  compute term    = HLO_FLOPs / peak_FLOPs          (per device)
+  memory term     = HLO_bytes / HBM_bw
+  collective term = Σ bytes(op) * algo_factor / link_bw
+
+collective bytes are not in cost_analysis: we parse the partitioned HLO text
+and sum result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (shapes in the partitioned module are already
+per-device).  all-reduce counts twice (reduce-scatter + all-gather phases).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_FACTOR = {"all-reduce": 2.0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TUPLE_RE = re.compile(r"=\s*\(([^)]*)\)\s*(\w[\w-]*)\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum per-device bytes by collective kind from partitioned HLO text."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("%") or s.startswith("ROOT"):
+            pass
+        kind = None
+        for k in _COLLECTIVES:
+            if f" {k}(" in s or f"{k}-start(" in s or f" {k}-start(" in s:
+                kind = k
+                break
+        if kind is None:
+            continue
+        # result type(s): everything left of the op name
+        lhs = s.split(f"{kind}(")[0].split(f"{kind}-start(")[0]
+        eq = lhs.find("=")
+        if eq < 0:
+            continue
+        result = lhs[eq + 1:]
+        m = _SHAPE_RE.findall(result)
+        if not m:
+            continue
+        b = sum(_shape_bytes(dt, dims) for dt, dims in m)
+        out[kind] += b
+        out["count"] += 1
+    out["total_bytes"] = sum(out[k] for k in _COLLECTIVES)
+    out["weighted_bytes"] = sum(out[k] * _FACTOR.get(k, 1.0)
+                                for k in _COLLECTIVES)
+    return out
+
+
+def scan_corrections(cfg, shape, plan, *, n_devices: int,
+                     chunk: int = 1024) -> Dict[str, float]:
+    """Static trip-count corrections for XLA's single-count of while bodies.
+
+    The dry-run unrolls layer stacks (exact), but three loops remain lowered
+    as `while`: (a) the online-softmax KV-chunk loop in attention, (b) the
+    Mamba/RWKV time recurrences, (c) the grad-accumulation microbatch loop.
+    XLA's cost model counts each body once (verified by a controlled
+    experiment — EXPERIMENTS.md §Method), so we add the missing
+    (trips-1)/trips share back analytically.  All quantities per device.
+    """
+    tp = max(plan.tp, 1)
+    dp = max(n_devices // tp, 1)
+    S = shape.seq_len
+    train = shape.kind == "train"
+    decode = shape.kind == "decode"
+    mult = 4.0 if train else 1.0          # fwd + remat fwd + bwd(~2x fwd)
+    if plan.seq_shard_decode:
+        b_loc, kv_shard = 1, dp
+    else:
+        b_loc, kv_shard = max(1, shape.global_batch // dp), 1
+
+    hq = plan.padded_heads(cfg.n_heads) // tp or 1
+    hkv = max(plan.padded_kv_heads(cfg.n_kv_heads) // tp, 1)
+    hd = cfg.hd
+    if plan.kv_quant and getattr(plan, "opt_int8_attend", True):
+        kv_bytes = 1          # int8 read in-loop, no materialized copy
+    elif plan.kv_quant:
+        kv_bytes = 5          # int8 read + f32 dequant write + bf16 re-read
+    else:
+        kv_bytes = 2
+    # GQA packing: KV is read once per kv head, not per q head
+    if decode and getattr(plan, "opt_gqa_pack", True) and \
+            not cfg.sliding_window:
+        attn_heads_bytes = hkv
+    else:
+        attn_heads_bytes = hq
+
+    extra_flops = 0.0
+    extra_bytes = 0.0
+
+    def attn_term(q_tokens, kv_len, heads, d, n_layers):
+        nonlocal extra_flops, extra_bytes
+        kv_loc = max(1, kv_len // kv_shard)
+        n_chunks = max(1, -(-kv_loc // chunk))
+        share = 1.0 - 1.0 / n_chunks
+        f = 4.0 * b_loc * q_tokens * kv_loc * heads * d * mult
+        by = 2.0 * b_loc * kv_loc * min(heads, attn_heads_bytes) * d \
+            * kv_bytes * mult
+        extra_flops += f * share * n_layers
+        extra_bytes += by * share * n_layers
+
+    n_attn = len(cfg.attn_layers())
+    if cfg.is_encdec:
+        ft = cfg.n_audio_frames
+        if decode:
+            attn_term(1, S, hq, hd, n_attn)          # self
+            attn_term(1, ft, hq, hd, n_attn)         # cross
+        else:
+            attn_term(ft, ft, hq, hd, cfg.encoder_layers)
+            attn_term(S, S, hq, hd, n_attn)
+            attn_term(S, ft, hq, hd, n_attn)
+    elif n_attn:
+        if cfg.mla is not None:
+            d_eff = cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+        else:
+            d_eff = hd
+        w = cfg.sliding_window
+        banded = (not decode and w and S > w and S % 1024 == 0
+                  and getattr(plan, "opt_banded_swa", True))
+        if not banded:   # banded SWA has no inner loop — counted exactly
+            kv_len = min(S, w) if (w and decode) else S
+            attn_term(1 if decode else S, kv_len, hq, d_eff, n_attn)
+
+    ssm_chunk = 256      # models/mamba.py + models/rwkv6.py chunk size
+    if cfg.mamba is not None:
+        n_mamba = cfg.n_layers - n_attn
+        d_in = max(1, cfg.mamba.expand * cfg.d_model // tp)
+        dtr = cfg.mamba.dt_rank or -(-cfg.d_model // 16)
+        n_st = cfg.mamba.d_state
+        steps = 1 if decode else S
+        share = 1.0 - 1.0 / max(1, steps)
+        share_c = 1.0 - 1.0 / max(1, -(-steps // ssm_chunk))
+        # recurrence (counted ~once by XLA)
+        extra_flops += 9.0 * b_loc * steps * d_in * n_st * mult * share * n_mamba
+        extra_bytes += 8.0 * b_loc * steps * d_in * n_st * mult * share * n_mamba
+        # per-chunk projections (x_proj/dt_proj live inside the chunk loop)
+        proj = 2.0 * b_loc * steps * (d_in * (dtr + 2 * n_st) + dtr * d_in)
+        extra_flops += proj * mult * share_c * n_mamba
+    if cfg.rwkv:
+        h_loc = max(1, cfg.n_heads // tp)
+        d = cfg.d_model
+        d_loc = max(1, d // tp)
+        steps = 1 if decode else S
+        share = 1.0 - 1.0 / max(1, steps)
+        share_c = 1.0 - 1.0 / max(1, -(-steps // ssm_chunk))
+        extra_flops += 6.0 * b_loc * steps * h_loc * hd * hd * mult * share \
+            * cfg.n_layers
+        extra_bytes += 8.0 * b_loc * steps * h_loc * hd * hd * mult * share \
+            * cfg.n_layers
+        proj = 2.0 * b_loc * steps * (4 * d * d_loc + 2 * d * 64)
+        extra_flops += proj * mult * share_c * cfg.n_layers
+
+    return {"extra_flops": extra_flops, "extra_bytes": extra_bytes,
+            "microbatch_scale": float(plan.microbatches)}
+
+
+def roofline(cost: dict, coll: Dict[str, float], *, n_devices: int,
+             model_flops: float, corrections: Optional[Dict[str, float]] = None
+             ) -> dict:
+    """Per-device roofline terms (seconds) + useful-compute ratio."""
+    corrections = corrections or {"extra_flops": 0.0, "extra_bytes": 0.0,
+                                  "microbatch_scale": 1.0}
+    mb = corrections["microbatch_scale"]
+    flops = float(cost.get("flops", 0.0)) * mb + corrections["extra_flops"]
+    bytes_acc = float(cost.get("bytes accessed", 0.0)) * mb \
+        + corrections["extra_bytes"]
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll["weighted_bytes"] * mb / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf_per_dev = model_flops / n_devices
+    return {
+        **terms,
+        "bottleneck": bottleneck,
+        "hlo_flops_per_dev": flops,
+        "hlo_bytes_per_dev": bytes_acc,
+        "collective_bytes_per_dev": coll["total_bytes"] * mb,
+        "model_flops_per_dev": mf_per_dev,
+        "useful_ratio": (mf_per_dev / flops) if flops else 0.0,
+        "roofline_bound_s": max(terms.values()),
+        "roofline_frac": (mf_per_dev / PEAK_FLOPS) / max(terms.values())
+        if max(terms.values()) > 0 else 0.0,
+    }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytical MODEL_FLOPS for the whole step (all devices)."""
+    n = cfg.n_active_params()
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    flops = mult * n * tokens
+    if shape.kind == "decode":
+        # attention KV reads dominate decode: 2*2*L*S*Hkv*D per token per layer
+        attn_layers = len(cfg.attn_layers())
+        hkv, hd = cfg.n_kv_heads, cfg.hd
+        s_eff = min(shape.seq_len, cfg.sliding_window) if cfg.sliding_window \
+            else shape.seq_len
+        if cfg.mla is not None:
+            hkv, hd = 1, cfg.mla.kv_lora_rank
+        flops += shape.global_batch * attn_layers * 4 * s_eff * hkv * hd \
+            * (cfg.n_heads // max(cfg.n_kv_heads, 1))
+    return flops

@@ -1,0 +1,28 @@
+"""Production mesh construction (multi-pod dry-run contract).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(dp: int = 1, tp: int = 1):
+    """Small mesh over however many devices the test environment has."""
+    return jax.make_mesh((dp, tp), ("data", "model"))
+
+
+def mesh_axes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_axes(mesh):
+    """Axes used for data parallelism (batch + ZeRO)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

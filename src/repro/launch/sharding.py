@@ -1,0 +1,186 @@
+"""Logical-axis -> mesh-axis mapping (GSPMD shardings).
+
+Parameters carry logical axis names (``models/param.Spec``); this module maps
+them to the production mesh:
+
+  TP  ("model"):  vocab, ffn, q_heads, kv_heads, q_heads_flat, experts' ffn
+  DP  ("pod","data"): batch dim of activations; ZeRO-1/2 optimizer/grad shards
+  SP  ("model"): sequence dim of inter-layer activations (Megatron-SP)
+
+ZeRO-1 placement: optimizer moments additionally shard their first
+DP-divisible replicated dim over ("pod","data").
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+
+LOGICAL_TO_MESH = {
+    "vocab": "model",
+    "ffn": "model",
+    "q_heads": "model",
+    "kv_heads": "model",
+    "q_heads_flat": "model",
+    "embed": None,
+    "embed_tp": "model",  # untied input-embedding table: shard d, not vocab
+    "vocab_in": None,
+    "layers": None,
+    "experts": None,      # expert weights shard on their ffn dim instead
+    "kv_lora": None,
+    "head_dim": None,
+    None: None,
+}
+
+
+def param_pspec(axes: tuple) -> P:
+    return P(*(LOGICAL_TO_MESH.get(a) for a in axes))
+
+
+def param_shardings(logical_tree: Any, mesh: Mesh, *,
+                    fsdp: bool = False, abstract_tree: Any = None) -> Any:
+    """Parameter shardings.  fsdp=True (ZeRO-3) additionally shards every
+    large leaf's first replicated DP-divisible dim over the data axes: the
+    layer scan then all-gathers one layer's weights at a time and
+    reduce-scatters its grads — the fit-enabler for ≥60B training on
+    16 GB/chip."""
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x)
+    if not fsdp:
+        return jax.tree.map(
+            lambda axes: NamedSharding(mesh, param_pspec(axes)), logical_tree,
+            is_leaf=is_axes)
+    assert abstract_tree is not None
+    axes_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = int(np.prod([axes_sizes[a] for a in dp_axes(mesh)]))
+    flat_ax, treedef = jax.tree.flatten(logical_tree, is_leaf=is_axes)
+    flat_ab = treedef.flatten_up_to(abstract_tree)
+    out = []
+    for ax, ab in zip(flat_ax, flat_ab):
+        size = int(np.prod(ab.shape)) if ab.shape else 0
+        if size >= (1 << 20):
+            out.append(NamedSharding(mesh, zero1_pspec(ax, ab.shape, dp)))
+        else:
+            out.append(NamedSharding(mesh, param_pspec(ax)))
+    return jax.tree.unflatten(treedef, out)
+
+
+def zero1_pspec(axes: tuple, shapes: tuple, dp_size: int) -> P:
+    """Optimizer-state sharding: param spec + DP shard on the first
+    replicated, DP-divisible dim (ZeRO-1)."""
+    spec = [LOGICAL_TO_MESH.get(a) for a in axes]
+    for i, (m, s) in enumerate(zip(spec, shapes)):
+        if m is None and s % dp_size == 0 and s >= dp_size:
+            spec[i] = ("pod", "data") if dp_size > 16 else "data"
+            break
+    return P(*spec)
+
+
+def zero1_shardings(logical_tree: Any, abstract_tree: Any, mesh: Mesh) -> Any:
+    axes_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = int(np.prod([axes_sizes[a] for a in dp_axes(mesh)]))
+    flat_ax, treedef = jax.tree.flatten(
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))
+    flat_ab = treedef.flatten_up_to(abstract_tree)
+    out = [NamedSharding(mesh, zero1_pspec(ax, ab.shape, dp))
+           for ax, ab in zip(flat_ax, flat_ab)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def batch_pspec(mesh: Mesh, *, seq_sharded: bool = False) -> P:
+    """(B, S, ...) activations: batch over DP; optionally seq over model."""
+    dp = dp_axes(mesh)
+    dp = dp[0] if len(dp) == 1 else dp
+    return P(dp, "model" if seq_sharded else None)
+
+
+def data_shardings(batch_tree: Any, mesh: Mesh) -> Any:
+    """Shard every batch leaf's dim0 over DP (positions3 has dim1=batch)."""
+    dp = dp_axes(mesh)
+    dp = dp[0] if len(dp) == 1 else dp
+
+    def shard_one(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] == 3:   # positions3 (3,B,S)
+            return NamedSharding(mesh, P(None, dp))
+        return NamedSharding(mesh, P(*([dp] + [None] * (leaf.ndim - 1))))
+    return jax.tree.map(shard_one, batch_tree)
+
+
+def cache_shardings(cache_tree: Any, mesh: Mesh, *,
+                    seq_shard: bool = False) -> Any:
+    """Typed sharding for decode caches (KVCache / MambaState / RWKVState /
+    whisper cross-KV), handling optional leading layer-stack dims.
+
+    Default: batch over DP, kv heads over model.  seq_shard=True
+    (long-context, global_batch=1): KV sequence over DP instead
+    (distributed flash decode); recurrent states replicate over DP.
+    """
+    from repro.models.attention import KVCache
+    from repro.models.mamba import MambaState
+    from repro.models.rwkv6 import RWKVState
+    dp = dp_axes(mesh)
+    dp = dp[0] if len(dp) == 1 else dp
+    tp_size = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+
+    def ns(*spec):
+        return NamedSharding(mesh, P(*spec))
+
+    def kv_leaf(a, batch_dims: int):
+        """(…L, B, S, H, D) pools or (…L, B, S, H) scales."""
+        lead = (None,) * (a.ndim - batch_dims)
+        if batch_dims == 0:      # scalar length
+            return ns()
+        hk = a.shape[-2] if batch_dims == 4 else a.shape[-1]
+        model = "model" if hk % tp_size == 0 and hk >= tp_size else None
+        if batch_dims == 4:      # (B,S,H,D)
+            spec = (None, dp, model, None) if seq_shard else \
+                (dp, None, model, None)
+        else:                    # (B,S,H) scales
+            spec = (None, dp, model) if seq_shard else (dp, None, model)
+        return ns(*lead, *spec)
+
+    def visit(node):
+        if isinstance(node, KVCache):
+            return KVCache(
+                k=kv_leaf(node.k, 4), v=kv_leaf(node.v, 4),
+                k_scale=None if node.k_scale is None else kv_leaf(node.k_scale, 3),
+                v_scale=None if node.v_scale is None else kv_leaf(node.v_scale, 3),
+                length=ns())
+        if isinstance(node, MambaState):
+            lead_c = (None,) * (node.conv.ndim - 3)
+            lead_s = (None,) * (node.ssm.ndim - 3)
+            b = None if seq_shard else dp
+            return MambaState(conv=ns(*lead_c, b, None, "model"),
+                              ssm=ns(*lead_s, b, "model", None))
+        if isinstance(node, RWKVState):
+            lead_x = (None,) * (node.x_tm.ndim - 2)
+            lead_w = (None,) * (node.wkv.ndim - 4)
+            b = None if seq_shard else dp
+            h = node.wkv.shape[-3]
+            hm = "model" if h % tp_size == 0 else None
+            return RWKVState(x_tm=ns(*lead_x, b, None),
+                             x_cm=ns(*lead_x, b, None),
+                             wkv=ns(*lead_w, b, hm, None, None))
+        if isinstance(node, (list, tuple)):
+            t = type(node)
+            vals = [visit(x) for x in node]
+            return t(vals) if t in (list, tuple) else t(*vals)
+        if hasattr(node, "ndim"):   # bare array (whisper cross-KV (L,B,F,H,hd))
+            if node.ndim == 5:
+                h = node.shape[-2]
+                hm = "model" if h % tp_size == 0 and h >= tp_size else None
+                return ns(None, dp if not seq_shard else None, None, hm, None)
+            return ns(*([None] * node.ndim))
+        return ns()
+
+    return visit(cache_tree)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

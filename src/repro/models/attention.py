@@ -1,0 +1,413 @@
+"""Attention: GQA / MQA / MLA, causal + sliding-window + cross, chunked
+online-softmax (flash-style) compute, int8-quantizable KV cache, decode path.
+
+The chunked implementation is the pure-jnp oracle mirrored by the Pallas
+kernel in ``kernels/flash_attention``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models.param import Spec
+from repro.models.plan import Plan
+
+NEG = -1e30
+
+
+# --------------------------------------------------------------------------
+# Parameter specs
+# --------------------------------------------------------------------------
+
+def gqa_spec(cfg: ModelConfig, plan: Plan):
+    d, hd = cfg.d_model, cfg.hd
+    hq = plan.padded_heads(cfg.n_heads)
+    hkv = plan.padded_kv_heads(cfg.n_kv_heads)
+    p = {
+        "wq": Spec((d, hq, hd), ("embed", "q_heads", "head_dim")),
+        "wk": Spec((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": Spec((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": Spec((hq, hd, d), ("q_heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = Spec((hq, hd), ("q_heads", "head_dim"), init="zeros")
+        p["bk"] = Spec((hkv, hd), ("kv_heads", "head_dim"), init="zeros")
+        p["bv"] = Spec((hkv, hd), ("kv_heads", "head_dim"), init="zeros")
+    return p
+
+
+def mla_spec(cfg: ModelConfig, plan: Plan):
+    m = cfg.mla
+    d = cfg.d_model
+    h = plan.padded_heads(cfg.n_heads)
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq": Spec((d, h, qk), ("embed", "q_heads", "head_dim")),
+        "w_dkv": Spec((d, m.kv_lora_rank), ("embed", "kv_lora")),
+        "w_kr": Spec((d, m.qk_rope_head_dim), ("embed", None)),
+        "w_uk": Spec((m.kv_lora_rank, h, m.qk_nope_head_dim),
+                     ("kv_lora", "q_heads", "head_dim")),
+        "w_uv": Spec((m.kv_lora_rank, h, m.v_head_dim),
+                     ("kv_lora", "q_heads", "head_dim")),
+        "wo": Spec((h, m.v_head_dim, d), ("q_heads", "head_dim", "embed")),
+    }
+
+
+def head_mask(cfg: ModelConfig, plan: Plan) -> Optional[jax.Array]:
+    """1/0 mask zeroing TP-padding q heads (keeps the padded model exact)."""
+    hq = plan.padded_heads(cfg.n_heads)
+    if hq == cfg.n_heads:
+        return None
+    return (jnp.arange(hq) < cfg.n_heads).astype(jnp.bfloat16)
+
+
+# --------------------------------------------------------------------------
+# Chunked online-softmax attention (oracle for the Pallas flash kernel)
+# --------------------------------------------------------------------------
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
+           causal: bool, window: int = 0, q_offset=0,
+           kv_len=None, chunk: int = 1024,
+           k_scale=None, v_scale=None) -> jax.Array:
+    """q (B,Sq,H,D); k/v (B,Skv,H,D) (kv heads pre-repeated).
+
+    Online-softmax over KV chunks: O(Sq*chunk) live memory.  `q_offset` is the
+    absolute position of q[0] (decode: cache length); `kv_len` masks the
+    valid cache prefix; `window`>0 adds sliding-window masking.
+    k_scale/v_scale (B,Skv,H): int8-native mode — k/v stay int8 in HBM and
+    dequantize per chunk inside the loop (§Perf hillclimb: halves the decode
+    memory term vs materializing a dequantized cache).
+    """
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    scale = D ** -0.5
+    qf = (q * scale).astype(jnp.float32).transpose(0, 2, 1, 3)  # (B,H,Sq,D)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    n_chunks = -(-Skv // chunk)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        padw = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, padw[:3])
+            v_scale = jnp.pad(v_scale, padw[:3])
+    kc = k.reshape(B, n_chunks, chunk, H, D).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, n_chunks, chunk, H, D).transpose(1, 0, 3, 2, 4)
+    if k_scale is not None:
+        ksc = k_scale.reshape(B, n_chunks, chunk, H).transpose(1, 0, 3, 2)
+        vsc = v_scale.reshape(B, n_chunks, chunk, H).transpose(1, 0, 3, 2)
+    else:
+        ksc = vsc = jnp.zeros((n_chunks, 1, 1, 1), jnp.float32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        ci, kb, vb, ks_, vs_ = inp  # kb/vb (B,H,chunk,D)
+        if k_scale is not None:     # int8-native: dequant per chunk
+            kb = kb.astype(jnp.float32) * ks_[..., None]
+            vb = vb.astype(jnp.float32) * vs_[..., None]
+        kv_pos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb.astype(jnp.float32))
+        mask = jnp.ones((Sq, chunk), bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        if kv_len is not None:
+            mask &= kv_pos[None, :] < kv_len
+        if pad:
+            mask &= kv_pos[None, :] < Skv
+        s = jnp.where(mask, s, NEG)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), NEG, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    # checkpoint the chunk body: without it the backward saves the f32
+    # probability block of EVERY chunk (O(S^2) resident again)
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body,
+                       policy=jax.checkpoint_policies.nothing_saveable),
+        (m0, l0, a0), (jnp.arange(n_chunks), kc, vc, ksc, vsc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return x
+    return jnp.repeat(x, n_rep, axis=2)
+
+
+def banded_attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  window: int, chunk: int = 1024) -> jax.Array:
+    """Sliding-window attention computed on the band only (§Perf hillclimb).
+
+    Each q chunk attends exactly the kv chunks that intersect its window:
+    FLOPs drop from O(S^2) to O(S·(window+chunk)) — e.g. 6.4x for
+    mixtral's 4096-window at 32k context.  No inner while loop, so the
+    dry-run cost analysis counts it exactly.
+    """
+    B, S, H, D = q.shape
+    assert S % chunk == 0 and window % chunk == 0, (S, window, chunk)
+    nb = S // chunk
+    wb = window // chunk
+    idx = jnp.arange(nb)[:, None] + jnp.arange(-wb, 1)[None, :]  # (nb,wb+1)
+    idx_c = jnp.clip(idx, 0, nb - 1)
+    band = (wb + 1) * chunk
+
+    kc = k.reshape(B, nb, chunk, H, D)
+    vc = v.reshape(B, nb, chunk, H, D)
+    kb = kc[:, idx_c].reshape(B, nb, band, H, D)
+    vb = vc[:, idx_c].reshape(B, nb, band, H, D)
+
+    q_pos = jnp.arange(S).reshape(nb, chunk)
+    kv_pos = (idx[..., None] * chunk +
+              jnp.arange(chunk)).reshape(nb, band)
+    mask = (kv_pos[:, None, :] >= 0) & \
+        (kv_pos[:, None, :] <= q_pos[:, :, None]) & \
+        (kv_pos[:, None, :] > q_pos[:, :, None] - window)   # (nb,chunk,band)
+
+    qf = (q.reshape(B, nb, chunk, H, D) * (D ** -0.5)).astype(jnp.float32)
+    s = jnp.einsum("bnqhd,bnkhd->bnhqk", qf, kb.astype(jnp.float32))
+    s = jnp.where(mask[None, :, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnhqk,bnkhd->bnqhd", p, vb.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# KV cache (bf16 or int8 with per-(token,head) scales)
+# --------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array           # (B, Smax, Hkv, D) bf16 or int8
+    v: jax.Array
+    k_scale: Optional[jax.Array]   # (B, Smax, Hkv) f32 when int8
+    v_scale: Optional[jax.Array]
+    length: jax.Array      # () int32 — valid prefix
+
+
+def init_kv_cache(batch: int, s_max: int, hkv: int, d: int,
+                  quant: bool) -> KVCache:
+    if quant:
+        return KVCache(
+            k=jnp.zeros((batch, s_max, hkv, d), jnp.int8),
+            v=jnp.zeros((batch, s_max, hkv, d), jnp.int8),
+            k_scale=jnp.zeros((batch, s_max, hkv), jnp.float32),
+            v_scale=jnp.zeros((batch, s_max, hkv), jnp.float32),
+            length=jnp.int32(0))
+    return KVCache(
+        k=jnp.zeros((batch, s_max, hkv, d), jnp.bfloat16),
+        v=jnp.zeros((batch, s_max, hkv, d), jnp.bfloat16),
+        k_scale=None, v_scale=None, length=jnp.int32(0))
+
+
+def _quant_kv(x: jax.Array):
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / jnp.maximum(s[..., None], 1e-8)),
+                 -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def cache_update(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
+                 pos) -> KVCache:
+    """Write k/v (B, S_new, Hkv, D) at offset `pos`."""
+    if cache.k.dtype == jnp.int8:
+        kq, ks = _quant_kv(k_new)
+        vq, vs = _quant_kv(v_new)
+        return cache._replace(
+            k=jax.lax.dynamic_update_slice(cache.k, kq, (0, pos, 0, 0)),
+            v=jax.lax.dynamic_update_slice(cache.v, vq, (0, pos, 0, 0)),
+            k_scale=jax.lax.dynamic_update_slice(cache.k_scale, ks, (0, pos, 0)),
+            v_scale=jax.lax.dynamic_update_slice(cache.v_scale, vs, (0, pos, 0)),
+            length=jnp.int32(pos) + k_new.shape[1])
+    return cache._replace(
+        k=jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                       (0, pos, 0, 0)),
+        v=jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                       (0, pos, 0, 0)),
+        length=jnp.int32(pos) + k_new.shape[1])
+
+
+def cache_kv(cache: KVCache):
+    """Materialize bf16 K/V from the cache (dequantize if int8)."""
+    if cache.k.dtype == jnp.int8:
+        k = cache.k.astype(jnp.float32) * cache.k_scale[..., None]
+        v = cache.v.astype(jnp.float32) * cache.v_scale[..., None]
+        return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+    return cache.k, cache.v
+
+
+# --------------------------------------------------------------------------
+# Full attention block forward (GQA / MLA)
+# --------------------------------------------------------------------------
+
+def gqa_forward(p, x: jax.Array, cfg: ModelConfig, plan: Plan, *,
+                angles=None, cache: Optional[KVCache] = None,
+                decode: bool = False, cross_kv=None, hmask=None) -> jax.Array:
+    """x (B,S,D).  Train/prefill: cache=None or prefill-fill.  Decode: S==1.
+
+    cross_kv: (k, v) from an encoder (whisper cross-attention)."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    q = plan.hint(q, "dp", None, "tp", None)   # Megatron: heads stay sharded
+    if cross_kv is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+        k = plan.hint(k, "dp", None, "tp", None)
+        v = plan.hint(v, "dp", None, "tp", None)
+        if angles is not None:
+            q = _rope(q, angles)
+            k = _rope(k, angles)
+    else:
+        k, v = cross_kv
+
+    if decode:
+        assert cache is not None
+        pos = cache.length
+        s_alloc = cache.k.shape[1]
+        ring = bool(cfg.sliding_window) and s_alloc <= cfg.sliding_window
+        if ring:
+            # ring buffer: the cache holds exactly the last `window` tokens,
+            # so slot order is irrelevant (attention is a set operation) and
+            # no window mask is needed — only the valid-slot count.
+            wpos = jnp.remainder(pos, s_alloc)
+            cache = cache_update(cache, k, v, wpos)._replace(length=pos + S)
+            kv_len = jnp.minimum(pos + S, s_alloc)
+            window, q_off = 0, None
+        else:
+            cache = cache_update(cache, k, v, pos)
+            kv_len = pos + S
+            window, q_off = cfg.sliding_window, pos
+        hq, D = q.shape[2], q.shape[3]
+        hkv = cache.k.shape[2]
+        n_rep = hq // hkv
+        # GQA packing (§Perf): fold the group dim into the query axis —
+        # each KV head is read once instead of n_rep times.  Valid when the
+        # mask is q-position-independent (decode S==1, no window mask).
+        pack = plan.opt_gqa_pack and n_rep > 1 and S == 1 and not window
+        if pack:
+            qx = q.reshape(B, hkv, n_rep, D).transpose(0, 2, 1, 3)
+            rep_eff = 1
+        else:
+            qx, rep_eff = q, n_rep
+        if cache.k.dtype == jnp.int8 and plan.opt_int8_attend:
+            # int8-native: KV stays int8 end-to-end, per-chunk dequant
+            out = attend(qx, repeat_kv(cache.k, rep_eff),
+                         repeat_kv(cache.v, rep_eff),
+                         k_scale=repeat_kv(cache.k_scale[..., None],
+                                           rep_eff)[..., 0],
+                         v_scale=repeat_kv(cache.v_scale[..., None],
+                                           rep_eff)[..., 0],
+                         causal=False, window=window,
+                         q_offset=pos if q_off is None else q_off,
+                         kv_len=kv_len)
+        else:
+            kf, vf = cache_kv(cache)
+            out = attend(qx, repeat_kv(kf, rep_eff), repeat_kv(vf, rep_eff),
+                         causal=False, window=window,
+                         q_offset=pos if q_off is None else q_off,
+                         kv_len=kv_len)
+        if pack:
+            out = out.transpose(0, 2, 1, 3).reshape(B, 1, hq, D)
+    else:
+        if cache is not None:        # prefill: also populate the cache
+            s_alloc = cache.k.shape[1]
+            if k.shape[1] > s_alloc:
+                # SWA ring: only the last `window` tokens are ever needed.
+                # With S % window == 0 (all assigned shapes) the tail lands
+                # on the same slots the decode ring (pos % window) expects.
+                cache = cache_update(cache, k[:, -s_alloc:], v[:, -s_alloc:],
+                                     0)._replace(length=jnp.int32(S))
+            else:
+                cache = cache_update(cache, k, v, 0)
+        n_rep = q.shape[2] // k.shape[2]
+        w = cfg.sliding_window
+        if (plan.opt_banded_swa and w and cross_kv is None and S > w
+                and S % 1024 == 0 and w % 1024 == 0):
+            out = banded_attend(q, repeat_kv(k, n_rep), repeat_kv(v, n_rep),
+                                window=w)
+        else:
+            out = attend(q, repeat_kv(k, n_rep), repeat_kv(v, n_rep),
+                         causal=cross_kv is None, window=w)
+    out = plan.hint(out, "dp", None, "tp", None)
+    if hmask is not None:
+        out = out * hmask[None, None, :, None]
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return (y, cache) if cache is not None else (y, None)
+
+
+def _rope(x, angles):
+    from repro.models.layers import apply_rope
+    return apply_rope(x, angles)
+
+
+def mla_forward(p, x: jax.Array, cfg: ModelConfig, plan: Plan, *,
+                angles=None, cache=None, decode: bool = False,
+                hmask=None):
+    """DeepSeek-V2 Multi-head Latent Attention.  The cache stores the
+    *compressed* latent c_kv (+ shared rope key): rank-512 per token."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q = plan.hint(q, "dp", None, "tp", None)
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    c_kv = x @ p["w_dkv"]                       # (B,S,rank)
+    k_rope = (x @ p["w_kr"])[:, :, None, :]     # (B,S,1,rope_dim)
+    if angles is not None:
+        q_rope = _rope(q_rope, angles)
+        k_rope = _rope(k_rope, angles)
+
+    if decode:
+        assert cache is not None
+        pos = cache.length
+        # latent cache: k slot <- c_kv, v slot <- k_rope (packed layout)
+        cache = cache_update(cache, c_kv[:, :, None, :], k_rope, pos)
+        c_all_, kr_all_ = cache_kv(cache)
+        c_all = c_all_[:, :, 0, :]
+        kr_all = kr_all_
+        kv_len = pos + S
+    else:
+        if cache is not None:
+            cache = cache_update(cache, c_kv[:, :, None, :], k_rope, 0)
+        c_all, kr_all, kv_len = c_kv, k_rope, None
+        pos = 0
+
+    k_nope = plan.hint(jnp.einsum("bsr,rhk->bshk", c_all, p["w_uk"]),
+                       "dp", None, "tp", None)
+    v = plan.hint(jnp.einsum("bsr,rhk->bshk", c_all, p["w_uv"]),
+                  "dp", None, "tp", None)
+    h = q.shape[2]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_all, kr_all.shape[:2] + (h,) + kr_all.shape[3:])],
+        axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # v head dim may differ from qk dim -> pad v to qk dim for shared attend
+    out = attend(qfull, k, _pad_last(v, qfull.shape[-1]),
+                 causal=not decode, q_offset=pos, kv_len=kv_len)
+    out = plan.hint(out[..., :m.v_head_dim], "dp", None, "tp", None)
+    if hmask is not None:
+        out = out * hmask[None, None, :, None]
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, cache
+
+
+def _pad_last(x, target):
+    if x.shape[-1] == target:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, target - x.shape[-1])])

@@ -1,0 +1,205 @@
+"""Shared NN building blocks: norms, RoPE / M-RoPE, FFNs, embeddings.
+
+Everything is a pure function over explicit parameter pytrees (built from
+``param.Spec`` trees).  Compute follows mixed precision: bf16 storage/matmuls,
+f32 softmax/norm statistics.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import Spec
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rms_norm_spec(d: int) -> Spec:
+    return Spec((d,), ("embed",), init="ones")
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def layer_norm_spec(d: int):
+    return {"w": Spec((d,), ("embed",), init="ones"),
+            "b": Spec((d,), ("embed",), init="zeros")}
+
+
+def layer_norm(x: jax.Array, p, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(dt) * p["w"] + p["b"]
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings (+ Qwen2-VL M-RoPE)
+# --------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, dim: int, theta: float) -> jax.Array:
+    """positions (..., S) -> angles (..., S, dim//2), f32."""
+    freqs = theta ** (-jnp.arange(0, dim // 2, dtype=jnp.float32) / (dim // 2))
+    return positions[..., None].astype(jnp.float32) * freqs
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x (B,S,H,D), angles (B,S,D/2) -> rotated x (rotate-half convention)."""
+    sin = jnp.sin(angles)[:, :, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_angles(positions3: jax.Array, dim: int, theta: float,
+                 sections) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: positions3 (3,B,S) = (t,h,w) streams;
+    `sections` partitions the dim//2 frequency slots among the streams."""
+    assert sum(sections) == dim // 2, (sections, dim)
+    freqs = theta ** (-jnp.arange(0, dim // 2, dtype=jnp.float32) / (dim // 2))
+    angles = positions3[..., None].astype(jnp.float32) * freqs  # (3,B,S,dim/2)
+    parts, start = [], 0
+    for i, sec in enumerate(sections):
+        parts.append(angles[i, :, :, start:start + sec])
+        start += sec
+    return jnp.concatenate(parts, axis=-1)                      # (B,S,dim/2)
+
+
+def sinusoid_positions(n: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (n, d)."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    inv = 10000.0 ** (-jnp.arange(d // 2, dtype=jnp.float32) / (d // 2 - 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# FFN (SwiGLU for LM family, GELU for whisper)
+# --------------------------------------------------------------------------
+
+def swiglu_spec(d: int, f: int):
+    return {"wi": Spec((d, 2 * f), ("embed", "ffn")),
+            "wo": Spec((f, d), ("ffn", "embed"))}
+
+
+def swiglu(p, x: jax.Array) -> jax.Array:
+    gu = x @ p["wi"]
+    g, u = jnp.split(gu, 2, axis=-1)
+    return (jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u) @ p["wo"]
+
+
+def gelu_mlp_spec(d: int, f: int):
+    return {"wi": Spec((d, f), ("embed", "ffn")),
+            "bi": Spec((f,), ("ffn",), init="zeros"),
+            "wo": Spec((f, d), ("ffn", "embed")),
+            "bo": Spec((d,), ("embed",), init="zeros")}
+
+
+def gelu_mlp(p, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu((x @ p["wi"] + p["bi"]).astype(jnp.float32), approximate=True)
+    return h.astype(x.dtype) @ p["wo"] + p["bo"]
+
+
+# --------------------------------------------------------------------------
+# Embedding / LM head (padded vocab)
+# --------------------------------------------------------------------------
+
+def embed_spec(vocab_padded: int, d: int, tied: bool = True) -> Spec:
+    """Tied tables shard on vocab (they are also the LM head).  Untied input
+    tables shard on d_model instead: the gather's *gradient* (scatter-add
+    into the table) then stays local per shard — a vocab-sharded gather grad
+    materializes the full (V, d) f32 table on every device."""
+    if tied:
+        return Spec((vocab_padded, d), ("vocab", "embed"), init="embed")
+    return Spec((vocab_padded, d), ("vocab_in", "embed_tp"), init="embed")
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return table[tokens]
+
+
+def lm_logits(x: jax.Array, table_or_head: jax.Array, vocab_logical: int,
+              transpose: bool, plan=None) -> jax.Array:
+    """Project to (padded) vocab; padded slots masked to -inf."""
+    w = table_or_head.T if transpose else table_or_head  # (d, Vp)
+    logits = (x @ w).astype(jnp.float32)
+    if plan is not None:
+        logits = plan.hint(logits, "dp", None, "tp")  # keep vocab sharded
+    vp = logits.shape[-1]
+    if vp > vocab_logical:
+        mask = jnp.arange(vp) >= vocab_logical
+        logits = jnp.where(mask, -1e30, logits)
+    return logits
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  ignore_id: int = -1) -> jax.Array:
+    """Mean CE over non-ignored targets; logits f32 (B,S,V)."""
+    valid = targets != ignore_id
+    tgt = jnp.maximum(targets, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def chunked_ce(x: jax.Array, head: jax.Array, targets: jax.Array,
+               vocab_logical: int, *, transpose: bool, plan=None,
+               chunk: int = 1024) -> jax.Array:
+    """Cross-entropy without materializing (B,S,V) logits (§Perf hillclimb).
+
+    Scans over sequence chunks; each chunk's logits live only inside the
+    (checkpointed) body, so peak memory is one chunk's worth in fwd AND bwd.
+    """
+    B, S, D = x.shape
+    if S % chunk or S <= chunk:
+        logits = lm_logits(x, head, vocab_logical, transpose=transpose,
+                           plan=plan)
+        return cross_entropy(logits, targets)
+    n = S // chunk
+    xc = x.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(acc, inp):
+        xb, tb = inp
+        logits = lm_logits(xb, head, vocab_logical, transpose=transpose,
+                           plan=plan)
+        valid = (tb >= 0)
+        tgt = jnp.maximum(tb, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+        nll, cnt = acc
+        return (nll + ((logz - gold) * valid).sum(),
+                cnt + valid.sum()), None
+
+    (nll, cnt), _ = jax.lax.scan(
+        jax.checkpoint(body,
+                       policy=jax.checkpoint_policies.nothing_saveable),
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (xc, tc))
+    return nll / jnp.maximum(cnt, 1)
+
+
+# --------------------------------------------------------------------------
+# Weight-only int8 quantization (serving plan)
+# --------------------------------------------------------------------------
+
+def quantize_int8(w: jax.Array):
+    """Per-output-channel symmetric int8: returns (q, scale)."""
+    scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / jnp.maximum(scale, 1e-8)),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def matmul_int8(x: jax.Array, q: jax.Array, scale: jax.Array) -> jax.Array:
+    return ((x @ q.astype(x.dtype)) * scale.astype(x.dtype))

@@ -1,0 +1,119 @@
+"""Mamba selective-SSM block (Jamba's sequence mixer).  [arXiv:2312.00752]
+
+Training/prefill uses a chunked ``lax.scan`` over time (O(S) memory);
+decode carries (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models.param import Spec
+from repro.models.plan import Plan
+
+
+def _dims(cfg: ModelConfig):
+    mm = cfg.mamba
+    d_in = mm.expand * cfg.d_model
+    dtr = mm.dt_rank or -(-cfg.d_model // 16)
+    return d_in, dtr, mm.d_state, mm.d_conv
+
+
+def mamba_spec(cfg: ModelConfig, plan: Plan):
+    d = cfg.d_model
+    d_in, dtr, n, dc = _dims(cfg)
+    return {
+        "in_proj": Spec((d, 2 * d_in), ("embed", "ffn")),
+        "conv_w": Spec((dc, d_in), (None, "ffn")),
+        "conv_b": Spec((d_in,), ("ffn",), init="zeros"),
+        "x_proj": Spec((d_in, dtr + 2 * n), ("ffn", None)),
+        "dt_proj": Spec((dtr, d_in), (None, "ffn")),
+        "dt_bias": Spec((d_in,), ("ffn",), init="zeros"),
+        "A_log": Spec((d_in, n), ("ffn", None), init="small"),
+        "D": Spec((d_in,), ("ffn",), init="ones"),
+        "out_proj": Spec((d_in, d), ("ffn", "embed")),
+    }
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array   # (B, d_conv-1, d_in)
+    ssm: jax.Array    # (B, d_in, d_state) f32
+
+
+def init_state(cfg: ModelConfig, batch: int) -> MambaState:
+    d_in, _, n, dc = _dims(cfg)
+    return MambaState(conv=jnp.zeros((batch, dc - 1, d_in), jnp.bfloat16),
+                      ssm=jnp.zeros((batch, d_in, n), jnp.float32))
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array]):
+    """Depthwise causal conv1d; x (B,S,d_in), w (dc,d_in)."""
+    dc = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, [(0, 0), (dc - 1, 0), (0, 0)])
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(dc)) + b
+    new_state = xp[:, -(dc - 1):, :] if dc > 1 else xp[:, :0, :]
+    return out, new_state
+
+
+def mamba_forward(p, x: jax.Array, cfg: ModelConfig, plan: Plan, *,
+                  state: Optional[MambaState] = None, decode: bool = False,
+                  chunk: int = 256):
+    """x (B,S,D) -> (B,S,D).  decode: S==1 with carried state.
+
+    Chunked selective scan: the (B,S,d_in,n) discretized tensors never
+    materialize for the full sequence — each chunk computes its own
+    dt/B/C/dA/dBx, runs the recurrence, and contracts with C immediately
+    (the TPU-native equivalent of the fused selective-scan kernel)."""
+    mm = cfg.mamba
+    d_in, dtr, n, dc = _dims(cfg)
+    B, S, _ = x.shape
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state.conv if state is not None else None
+    xi, new_conv = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(x.dtype)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (d_in,n)
+    h0 = state.ssm if state is not None else jnp.zeros((B, d_in, n),
+                                                       jnp.float32)
+
+    def chunk_body(h, xi_c):
+        """xi_c (B, ck, d_in) -> y_c (B, ck, d_in), carry h (B, d_in, n)."""
+        dbc = xi_c @ p["x_proj"]
+        dt_r, Bc, Cc = jnp.split(dbc, [dtr, dtr + n], axis=-1)
+        dt = jax.nn.softplus((dt_r @ p["dt_proj"] + p["dt_bias"]
+                              ).astype(jnp.float32))          # (B,ck,d_in)
+        dA = jnp.exp(dt[..., None] * A)                       # (B,ck,d_in,n)
+        dBx = (dt * xi_c.astype(jnp.float32))[..., None] * \
+            Bc.astype(jnp.float32)[:, :, None, :]
+
+        def step(hh, inp):
+            da, dbx, cc = inp
+            hh = hh * da + dbx
+            return hh, jnp.einsum("bdn,bn->bd", hh, cc)
+
+        h, y = jax.lax.scan(
+            step, h,
+            (dA.transpose(1, 0, 2, 3), dBx.transpose(1, 0, 2, 3),
+             Cc.astype(jnp.float32).transpose(1, 0, 2)))
+        return h, y.transpose(1, 0, 2)                        # (B,ck,d_in)
+
+    ck = chunk if (S > chunk and S % chunk == 0) else S
+    if ck == S:
+        hT, y = chunk_body(h0, xi)
+    else:
+        n_chunks = S // ck
+        xs = xi.reshape(B, n_chunks, ck, d_in).transpose(1, 0, 2, 3)
+        hT, ys = jax.lax.scan(chunk_body, h0, xs)
+        y = ys.transpose(1, 0, 2, 3).reshape(B, S, d_in)
+    y = y + xi.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = y.astype(x.dtype) @ p["out_proj"]
+    new_state = MambaState(conv=new_conv, ssm=hT)
+    return out, new_state

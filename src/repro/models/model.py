@@ -1,0 +1,201 @@
+"""Top-level model builder: embeddings + stack + head, loss, prefill/decode.
+
+``build_model(cfg, plan)`` returns a ``Model`` whose methods are pure
+functions suitable for jit/pjit:
+
+  init_params(rng) / abstract_params() / logical_axes()
+  loss(params, batch)            -> (scalar, metrics)       [train]
+  forward(params, batch)         -> logits                  [eval]
+  init_decode(batch, s_max)      -> caches
+  prefill(params, batch, caches) -> (caches, last_logits)
+  decode_step(params, caches, tokens, pos) -> (caches, logits)
+
+Batch layout by family (see launch/specs.py for the ShapeDtypeStructs):
+  lm/moe/ssm/hybrid: {tokens (B,S), targets (B,S)}
+  vlm:   + {vision_embeds (B,Nv,D), positions3 (3,B,S)}
+  audio: {audio_embeds (B,F,D), tokens, targets}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import attention, transformer, whisper
+from repro.models import param as param_lib
+from repro.models.layers import (cross_entropy, embed_lookup, embed_spec,
+                                 lm_logits, mrope_angles, rope_angles)
+from repro.models.param import Spec
+from repro.models.plan import Plan
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    plan: Plan
+
+    # ---------------- specs ----------------
+    def spec(self) -> Dict[str, Any]:
+        cfg, plan = self.cfg, self.plan
+        vp = plan.padded_vocab(cfg.vocab_size)
+        if cfg.is_encdec:
+            return whisper.whisper_spec(cfg, plan, vp, max_dec_len=32768)
+        s = {"tok_embed": embed_spec(vp, cfg.d_model,
+                                     tied=cfg.tie_embeddings),
+             "stack": transformer.stack_spec(cfg, plan)}
+        if not cfg.tie_embeddings:
+            s["lm_head"] = Spec((cfg.d_model, vp), ("embed", "vocab"))
+        return s
+
+    def init_params(self, rng):
+        return param_lib.init_params(self.spec(), rng)
+
+    def abstract_params(self):
+        return param_lib.abstract_params(self.spec())
+
+    def logical_axes(self):
+        return param_lib.logical_axes(self.spec())
+
+    # ---------------- positions ----------------
+    def _angles(self, positions, batch: Optional[dict] = None):
+        cfg = self.cfg
+        if cfg.rope_theta == 0:
+            return None
+        dim = cfg.mla.qk_rope_head_dim if cfg.mla is not None else cfg.hd
+        if cfg.m_rope:
+            if batch is not None and "positions3" in batch:
+                pos3 = batch["positions3"]
+            else:
+                pos3 = jnp.broadcast_to(positions[None],
+                                        (3,) + positions.shape)
+            return mrope_angles(pos3, dim, cfg.rope_theta,
+                                cfg.mrope_sections)
+        return rope_angles(positions, dim, cfg.rope_theta)
+
+    # ---------------- embeddings ----------------
+    def _embed_in(self, params, batch):
+        cfg = self.cfg
+        x = embed_lookup(params["tok_embed"], batch["tokens"])
+        if cfg.family == "vlm" and "vision_embeds" in batch:
+            x = jnp.concatenate(
+                [batch["vision_embeds"].astype(x.dtype), x], axis=1)
+        return x
+
+    # ---------------- train / eval ----------------
+    def forward(self, params, batch):
+        cfg, plan = self.cfg, self.plan
+        if cfg.is_encdec:
+            enc_out = whisper.encode(params, batch["audio_embeds"], cfg, plan)
+            B, S = batch["tokens"].shape
+            x = embed_lookup(params["tok_embed"], batch["tokens"])
+            x = x + params["pos_embed"][:S]
+            x, _ = whisper.decode_stack(params, x, cfg, plan, enc_out=enc_out)
+            return lm_logits(x, params["tok_embed"], cfg.vocab_size,
+                             transpose=True, plan=plan)
+        x = self._embed_in(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        angles = self._angles(positions, batch)
+        x, _, aux = transformer.stack_forward(params["stack"], x, cfg, plan,
+                                              angles=angles)
+        head = params["tok_embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = lm_logits(x, head, cfg.vocab_size,
+                           transpose=cfg.tie_embeddings, plan=plan)
+        self._last_aux = aux
+        return logits
+
+    def loss(self, params, batch):
+        cfg, plan = self.cfg, self.plan
+        tgt = batch["targets"]
+        if plan.opt_chunked_ce and not cfg.is_encdec and \
+                batch["tokens"].shape[1] >= 2048:
+            # chunked CE: never materializes (B,S,V) logits (§Perf)
+            from repro.models.layers import chunked_ce
+            x = self._embed_in(params, batch)
+            B, S, _ = x.shape
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+            angles = self._angles(positions, batch)
+            x, _, aux = transformer.stack_forward(
+                params["stack"], x, cfg, plan, angles=angles)
+            if cfg.family == "vlm" and "vision_embeds" in batch:
+                nv = batch["vision_embeds"].shape[1]
+                x = x[:, nv:]
+            head = params["tok_embed"] if cfg.tie_embeddings \
+                else params["lm_head"]
+            ce = chunked_ce(x, head, tgt, cfg.vocab_size,
+                            transpose=cfg.tie_embeddings, plan=plan)
+        else:
+            logits = self.forward(params, batch)
+            if cfg.family == "vlm" and "vision_embeds" in batch:
+                # vision prefix carries no LM loss
+                nv = batch["vision_embeds"].shape[1]
+                logits = logits[:, nv:]
+            ce = cross_entropy(logits, tgt)
+            aux = getattr(self, "_last_aux", jnp.zeros((), jnp.float32))
+        loss = ce + 0.01 * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # ---------------- serving ----------------
+    def init_decode(self, batch: int, s_max: int):
+        cfg, plan = self.cfg, self.plan
+        if cfg.is_encdec:
+            return whisper.init_caches(cfg, plan, batch, s_max)
+        return transformer.init_caches(cfg, plan, batch, s_max)
+
+    def prefill(self, params, batch, caches):
+        """Populate caches from a full prompt; returns (caches, last_logits)."""
+        cfg, plan = self.cfg, self.plan
+        if cfg.is_encdec:
+            enc_out = whisper.encode(params, batch["audio_embeds"], cfg, plan)
+            B, S = batch["tokens"].shape
+            x = embed_lookup(params["tok_embed"], batch["tokens"])
+            x = x + params["pos_embed"][:S]
+            cross = whisper._cross_kv(params, enc_out, cfg, plan)
+            x, caches = whisper.decode_stack(params, x, cfg, plan,
+                                             cross_kv=cross, caches=caches)
+            logits = lm_logits(x[:, -1:], params["tok_embed"],
+                               cfg.vocab_size, transpose=True)
+            return (caches, cross), logits
+        x = self._embed_in(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        angles = self._angles(positions, batch)
+        x, caches, _ = transformer.stack_forward(
+            params["stack"], x, cfg, plan, angles=angles, caches=caches)
+        head = params["tok_embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = lm_logits(x[:, -1:], head, cfg.vocab_size,
+                           transpose=cfg.tie_embeddings)
+        return caches, logits
+
+    def decode_step(self, params, caches, tokens, pos):
+        """tokens (B,1) at absolute position `pos` -> (caches, logits)."""
+        cfg, plan = self.cfg, self.plan
+        if cfg.is_encdec:
+            caches, cross = caches
+            B = tokens.shape[0]
+            x = embed_lookup(params["tok_embed"], tokens)
+            x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1)
+            x, caches = whisper.decode_stack(params, x, cfg, plan,
+                                             cross_kv=cross, caches=caches,
+                                             decode=True)
+            logits = lm_logits(x, params["tok_embed"], cfg.vocab_size,
+                               transpose=True)
+            return (caches, cross), logits
+        x = embed_lookup(params["tok_embed"], tokens)
+        B = tokens.shape[0]
+        positions = jnp.broadcast_to(jnp.asarray(pos)[None, None], (B, 1))
+        angles = self._angles(positions)
+        x, caches, _ = transformer.stack_forward(
+            params["stack"], x, cfg, plan, angles=angles, caches=caches,
+            decode=True)
+        head = params["tok_embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = lm_logits(x, head, cfg.vocab_size,
+                           transpose=cfg.tie_embeddings)
+        return caches, logits
+
+
+def build_model(cfg: ModelConfig, plan: Plan = Plan()) -> Model:
+    return Model(cfg, plan)

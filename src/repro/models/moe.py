@@ -1,0 +1,123 @@
+"""Mixture-of-Experts: top-k routing with sort-based dispatch (MegaBlocks
+style), shared experts (DeepSeek-V2), capacity bounding for static shapes.
+
+Expert weights are sharded on the *ffn* dim over the model axis (expert-count
+agnostic — works for 8/16/64 experts on a fixed 16-way axis; DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, MoEConfig
+from repro.models.param import Spec
+from repro.models.plan import Plan
+
+
+def moe_spec(cfg: ModelConfig, plan: Plan):
+    m = cfg.moe
+    d = cfg.d_model
+    f = plan.padded_ffn(m.d_expert)
+    p = {
+        "router": Spec((d, m.n_experts), ("embed", "experts"),
+                       dtype=jnp.float32),
+        "wi": Spec((m.n_experts, d, 2 * f), ("experts", "embed", "ffn")),
+        "wo": Spec((m.n_experts, f, d), ("experts", "ffn", "embed")),
+    }
+    if m.n_shared:
+        fs = plan.padded_ffn(m.d_expert * m.n_shared)
+        p["shared_wi"] = Spec((d, 2 * fs), ("embed", "ffn"))
+        p["shared_wo"] = Spec((fs, d), ("ffn", "embed"))
+    return p
+
+
+def route_topk(logits: jax.Array, k: int):
+    """logits (T,E) f32 -> (weights (T,k), idx (T,k)); softmax over top-k."""
+    vals, idx = jax.lax.top_k(logits, k)
+    w = jax.nn.softmax(vals, axis=-1)
+    return w, idx
+
+
+def _dispatch_group(xt, logits, p, m, C, top_k, dtype):
+    """Sort-based dispatch for ONE token group (Tg, D) — runs shard-local
+    when vmapped over DP groups."""
+    Tg, D = xt.shape
+    E = m.n_experts
+    w, idx = route_topk(logits, top_k)                       # (Tg,k)
+    tk = Tg * top_k
+    flat_e = idx.reshape(tk)
+    flat_t = jnp.repeat(jnp.arange(Tg), top_k)
+    flat_w = w.reshape(tk)
+
+    order = jnp.argsort(flat_e)                               # group by expert
+    e_sorted = flat_e[order]
+    t_sorted = flat_t[order]
+    w_sorted = flat_w[order]
+    starts = jnp.searchsorted(e_sorted, jnp.arange(E))
+    rank = jnp.arange(tk) - starts[e_sorted]
+    keep = rank < C
+    slot = e_sorted * C + jnp.where(keep, rank, 0)
+
+    buf = jnp.zeros((E * C, D), dtype)
+    buf = buf.at[jnp.where(keep, slot, E * C)].set(
+        xt[t_sorted], mode="drop")
+    buf = buf.reshape(E, C, D)
+
+    gu = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    g, u = jnp.split(gu, 2, axis=-1)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dtype) * u
+    out = jnp.einsum("ecf,efd->ecd", h, p["wo"]).reshape(E * C, D)
+
+    gathered = out[jnp.where(keep, slot, 0)] * \
+        (w_sorted * keep).astype(dtype)[:, None]
+    y = jnp.zeros((Tg, D), dtype).at[t_sorted].add(gathered)
+    drop = 1.0 - keep.mean()
+    return y, drop
+
+
+def moe_forward(p, x: jax.Array, cfg: ModelConfig, plan: Plan):
+    """x (B,S,D) -> (B,S,D), aux metrics dict.
+
+    Dispatch is LOCAL per DP group (vmapped over ``plan.dp * plan.pods``
+    groups on the batch dim): sort, capacity, scatter and the (E,C,D)
+    compute buffers all shard cleanly — no global sort, no cross-shard
+    scatter (DESIGN.md §4, EP).  Capacity is per group; factor 0 =
+    drop-free for small token counts (serving / exactness tests).
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E = m.n_experts
+    G = max(1, plan.dp * plan.pods) if B % max(1, plan.dp * plan.pods) == 0 \
+        else 1
+    Tg = T // G
+    if plan.moe_capacity <= 0:
+        tkg = Tg * m.top_k
+        C = tkg if tkg <= 8192 else max(1, int(tkg / E * 2.0))
+    else:
+        C = max(1, int(Tg * m.top_k / E * plan.moe_capacity))
+
+    xt = x.reshape(G, Tg, D)
+    xt = plan.hint(xt, "dp", None, None)
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+
+    y, drop = jax.vmap(
+        lambda xg, lg: _dispatch_group(xg, lg, p, m, C, m.top_k, x.dtype)
+    )(xt, logits)
+    y = plan.hint(y, "dp", None, None)
+
+    if m.n_shared:
+        from repro.models.layers import swiglu
+        y = y + jax.vmap(
+            lambda xg: swiglu({"wi": p["shared_wi"], "wo": p["shared_wo"]},
+                              xg))(xt)
+
+    # load-balancing auxiliaries (Switch-style), computed globally
+    lflat = logits.reshape(T, E)
+    _, idx = route_topk(lflat, m.top_k)
+    me = jnp.mean(jax.nn.softmax(lflat, -1), axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / \
+        (T * m.top_k)
+    aux = {"load_balance_loss": E * jnp.sum(me * ce),
+           "dropped_frac": drop.mean()}
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,87 @@
+"""Parameter specification trees: shapes + logical sharding axes + init.
+
+Models declare their parameters as trees of ``Spec`` (shape, logical axes,
+initializer).  From one spec tree we derive:
+  * ``init_params``        — materialized arrays (reduced configs / tests)
+  * ``abstract_params``    — ShapeDtypeStructs (dry-run, no allocation)
+  * ``logical_axes``       — same-structure tree of logical-axis tuples,
+                             mapped to mesh axes by ``launch/sharding.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis per dim (None = replicated)
+    init: str = "normal"              # normal|zeros|ones|small|embed
+    scale: float = 1.0
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _fan_in(shape):
+    return shape[-2] if len(shape) >= 2 else shape[-1]
+
+
+def _init_one(spec: Spec, key) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        std = spec.scale / np.sqrt(max(1, _fan_in(spec.shape)))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std
+                ).astype(spec.dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape, jnp.float32) * 0.02
+                ).astype(spec.dtype)
+    if spec.init == "small":
+        return (jax.random.normal(key, spec.shape, jnp.float32) * 1e-3
+                ).astype(spec.dtype)
+    raise ValueError(spec.init)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def init_params(tree, rng) -> Any:
+    """Materialize a spec tree with per-leaf folded rngs (deterministic)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    out = []
+    for i, leaf in enumerate(leaves):
+        out.append(_init_one(leaf, jax.random.fold_in(rng, i)))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(tree) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree,
+        is_leaf=is_spec)
+
+
+def logical_axes(tree) -> Any:
+    return jax.tree.map(lambda s: s.axes, tree, is_leaf=is_spec)
+
+
+def param_count(tree) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(tree, is_leaf=is_spec))
+
+
+def stack_layers(tree, n: int) -> Any:
+    """Prepend a scanned 'layers' dim to every spec in the tree."""
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, ("layers",) + s.axes, s.init,
+                       s.scale, s.dtype),
+        tree, is_leaf=is_spec)

@@ -1,0 +1,77 @@
+"""Parallel/memory execution plan — how a model is laid out on the mesh.
+
+Separates *logical* architecture (``ModelConfig``) from *physical* choices:
+TP head padding, vocab padding, KV/weight quantization for serving, remat and
+microbatching for training, sequence-sharded decode for long context.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from jax.sharding import PartitionSpec
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    tp: int = 1                  # model-axis size
+    dp: int = 1                  # data-axis size (informational)
+    pods: int = 1
+    vocab_pad: int = 256
+    kv_quant: bool = False       # int8 KV cache (serving, big models)
+    weight_quant: bool = False   # int8 weight-only quant (serving)
+    remat: str = "full"          # full | none
+    microbatches: int = 1        # grad-accumulation steps
+    seq_shard_decode: bool = False  # shard KV sequence over data axis
+    zero_grads: bool = True      # ZeRO-2 reduce-scattered grads
+    fsdp: bool = False           # ZeRO-3: shard bf16 params over DP too
+    scan_layers: bool = True
+    moe_capacity: float = 1.25   # expert capacity factor; 0 -> drop-free
+                                 # (serving / correctness tests)
+    # §Perf hillclimb toggles (beyond-paper optimizations; EXPERIMENTS.md)
+    opt_banded_swa: bool = True   # banded sliding-window attention
+    opt_int8_attend: bool = True  # int8-native decode attention
+    opt_chunked_ce: bool = True   # chunked cross-entropy (no (B,S,V) f32)
+    opt_gqa_pack: bool = True     # decode: fold GQA groups into the query
+                                  # axis instead of materializing repeated KV
+    act_pspec: Optional[PartitionSpec] = None
+    # Megatron-SP: inter-layer activations (B,S,D) constrained to this spec
+    # (seq over "model"), cubing down the remat footprint of deep stacks.
+    # None disables (tests without a mesh context).
+    hint_dp = None  # interior-hint DP axes ("data" or ("pod","data"));
+    # set via object.__setattr__ in make_plan (kept out of __init__ so
+    # reduced-config tests need no mesh)
+
+    def hint(self, x, *spec):
+        """Interior sharding hint (Megatron-style): entries are 'dp', 'tp'
+        or None.  Active when hint_dp (or act_pspec) is set — GSPMD
+        otherwise picks layouts from the parameter shardings alone."""
+        dp = self.hint_dp if self.hint_dp is not None else (
+            self.act_pspec[0] if self.act_pspec is not None else None)
+        if dp is None:
+            return x
+        import jax
+        resolved = tuple(dp if s == "dp" else ("model" if s == "tp" else None)
+                         for s in spec)
+        return jax.lax.with_sharding_constraint(x, PartitionSpec(*resolved))
+
+    def padded_heads(self, n_heads: int) -> int:
+        """Zero-pad q heads to a TP multiple (exact function; DESIGN.md §4)."""
+        return _ceil_to(n_heads, self.tp)
+
+    def padded_kv_heads(self, n_kv: int) -> int:
+        """Replicate kv heads up to the TP degree (standard GQA-TP trick)."""
+        return max(n_kv, self.tp) if self.tp > 1 else n_kv
+
+    def padded_vocab(self, v: int) -> int:
+        return _ceil_to(v, max(self.vocab_pad, self.tp))
+
+    def padded_ffn(self, f: int) -> int:
+        return _ceil_to(f, self.tp)
+
+
+DEFAULT_PLAN = Plan()

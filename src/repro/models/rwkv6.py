@@ -1,0 +1,165 @@
+"""RWKV-6 "Finch": attention-free time-mix with data-dependent decay.
+[arXiv:2404.05892]
+
+Faithful structure: per-layer token-shift ddlerp, LoRA-produced per-channel
+decay w_t, the wkv matrix-state recurrence with in-place bonus `u`, gated
+output; squared-ReLU channel-mix.  Train/prefill scans over time; decode
+carries (x_prev_tm, x_prev_cm, wkv_state).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models.param import Spec
+from repro.models.plan import Plan
+
+LORA = 64  # decay LoRA rank (rwkv6 uses 64 for w at 3B scale)
+
+
+def rwkv_spec(cfg: ModelConfig, plan: Plan):
+    d = cfg.d_model
+    h, hd = cfg.n_heads, cfg.hd
+    assert h * hd == d, "rwkv6: heads*head_dim must equal d_model"
+    return {
+        "ln1": Spec((d,), ("embed",), init="ones"),
+        "ln1_b": Spec((d,), ("embed",), init="zeros"),
+        "ln2": Spec((d,), ("embed",), init="ones"),
+        "ln2_b": Spec((d,), ("embed",), init="zeros"),
+        "tm": {  # time mix
+            "mu": Spec((5, d), (None, "embed"), init="small"),  # r,k,v,g,w
+            "wr": Spec((d, d), ("embed", "q_heads_flat")),
+            "wk": Spec((d, d), ("embed", "q_heads_flat")),
+            "wv": Spec((d, d), ("embed", "q_heads_flat")),
+            "wg": Spec((d, d), ("embed", "q_heads_flat")),
+            "w0": Spec((d,), ("embed",), init="small"),
+            "w1": Spec((d, LORA), ("embed", None), init="small"),
+            "w2": Spec((LORA, d), (None, "embed"), init="small"),
+            # per-head bonus: 40 heads don't divide a 16-way model axis —
+            # tiny tensor, replicated (the big d x d projections still TP)
+            "u": Spec((h, hd), (None, None), init="small"),
+            "ln_w": Spec((d,), ("embed",), init="ones"),   # group-norm scale
+            "wo": Spec((d, d), ("q_heads_flat", "embed")),
+        },
+        "cm": {  # channel mix
+            "mu": Spec((2, d), (None, "embed"), init="small"),  # k,r
+            "wk": Spec((d, cfg.d_ff), ("embed", "ffn")),
+            "wv": Spec((cfg.d_ff, d), ("ffn", "embed")),
+            "wr": Spec((d, d), ("embed", None)),
+        },
+    }
+
+
+class RWKVState(NamedTuple):
+    x_tm: jax.Array    # (B, D) last input seen by time-mix
+    x_cm: jax.Array    # (B, D) last input seen by channel-mix
+    wkv: jax.Array     # (B, H, hd, hd) f32 matrix state
+
+
+def init_state(cfg: ModelConfig, batch: int) -> RWKVState:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    return RWKVState(x_tm=jnp.zeros((batch, d), jnp.bfloat16),
+                     x_cm=jnp.zeros((batch, d), jnp.bfloat16),
+                     wkv=jnp.zeros((batch, h, hd, hd), jnp.float32))
+
+
+def _token_shift(x: jax.Array, x_prev: Optional[jax.Array]):
+    """x (B,S,D) -> previous-token stream (B,S,D)."""
+    if x_prev is None:
+        prev = jnp.pad(x, [(0, 0), (1, 0), (0, 0)])[:, :-1]
+    else:
+        prev = jnp.concatenate([x_prev[:, None, :], x[:, :-1]], axis=1)
+    return prev
+
+
+def time_mix(p, x: jax.Array, cfg: ModelConfig, *,
+             x_prev=None, wkv0=None, chunk: int = 256):
+    """x (B,S,D) -> (B,S,D), (x_last, wkv_state).
+
+    Chunked: projections + the wkv recurrence run per chunk, so no
+    (S,B,h,hd) f32 stream ever materializes for the full sequence."""
+    B, S, D = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    u = p["u"].astype(jnp.float32)
+
+    def chunk_body(carry, x_c):
+        wkv, x_last = carry                        # (B,h,hd,hd), (B,D)
+        prev = jnp.concatenate([x_last[:, None], x_c[:, :-1]], axis=1)
+        delta = prev - x_c
+
+        def lerp(i):
+            return x_c + delta * p["mu"][i]
+
+        ck = x_c.shape[1]
+        r = (lerp(0) @ p["wr"]).reshape(B, ck, h, hd).astype(jnp.float32)
+        k = (lerp(1) @ p["wk"]).reshape(B, ck, h, hd).astype(jnp.float32)
+        v = (lerp(2) @ p["wv"]).reshape(B, ck, h, hd).astype(jnp.float32)
+        g = lerp(3) @ p["wg"]
+        wl = jnp.tanh((lerp(4) @ p["w1"]).astype(jnp.float32)) @ \
+            p["w2"].astype(jnp.float32)
+        w = jnp.exp(-jnp.exp(p["w0"].astype(jnp.float32) + wl))
+        w = w.reshape(B, ck, h, hd)
+
+        def step(state, inp):
+            rt, kt, vt, wt = inp                   # (B,h,hd)
+            kv = kt[..., :, None] * vt[..., None, :]
+            out = jnp.einsum("bhk,bhkv->bhv", rt,
+                             state + u[..., :, None] * kv)
+            state = state * wt[..., :, None] + kv
+            return state, out
+
+        wkv, outs = jax.lax.scan(
+            step, wkv, (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+                        v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3)))
+        y = outs.transpose(1, 0, 2, 3)             # (B,ck,h,hd)
+        mu_ = y.mean(-1, keepdims=True)
+        var = jnp.var(y, axis=-1, keepdims=True)
+        y = ((y - mu_) * jax.lax.rsqrt(var + 64e-5)).reshape(B, ck, D)
+        y = y * p["ln_w"].astype(jnp.float32)
+        y = y * jax.nn.silu(g.astype(jnp.float32))
+        return (wkv, x_c[:, -1]), y.astype(x_c.dtype)
+
+    wkv0 = wkv0 if wkv0 is not None else jnp.zeros((B, h, hd, hd),
+                                                   jnp.float32)
+    x_last0 = x_prev if x_prev is not None else jnp.zeros((B, D), x.dtype)
+    ck = chunk if (S > chunk and S % chunk == 0) else S
+    if ck == S:
+        (wkvT, x_last), y = chunk_body((wkv0, x_last0), x)
+    else:
+        n_chunks = S // ck
+        xs = x.reshape(B, n_chunks, ck, D).transpose(1, 0, 2, 3)
+        (wkvT, x_last), ys = jax.lax.scan(chunk_body, (wkv0, x_last0), xs)
+        y = ys.transpose(1, 0, 2, 3).reshape(B, S, D)
+    return y @ p["wo"], (x_last, wkvT)
+
+
+def channel_mix(p, x: jax.Array, *, x_prev=None):
+    prev = _token_shift(x, x_prev)
+    delta = prev - x
+    k = (x + delta * p["mu"][0]) @ p["wk"]
+    r = (x + delta * p["mu"][1]) @ p["wr"]
+    vk = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    return jax.nn.sigmoid(r.astype(jnp.float32)).astype(x.dtype) * \
+        (vk @ p["wv"]), x[:, -1]
+
+
+def rwkv_block(p, x: jax.Array, cfg: ModelConfig, plan: Plan, *,
+               state: Optional[RWKVState] = None):
+    """One full RWKV layer: ln1 -> time-mix -> +res; ln2 -> channel-mix -> +res.
+    Token-shift streams operate on the *normed* activations (rwkv convention).
+    """
+    from repro.models.layers import layer_norm
+    xn1 = layer_norm(x, {"w": p["ln1"], "b": p["ln1_b"]}, 1e-5)
+    x_tm = state.x_tm if state is not None else None
+    wkv0 = state.wkv if state is not None else None
+    y_tm, (x_last_tm, wkvT) = time_mix(p["tm"], xn1, cfg, x_prev=x_tm,
+                                       wkv0=wkv0)
+    x2 = x + y_tm
+    xn2 = layer_norm(x2, {"w": p["ln2"], "b": p["ln2_b"]}, 1e-5)
+    x_cm = state.x_cm if state is not None else None
+    y_cm, x_last_cm = channel_mix(p["cm"], xn2, x_prev=x_cm)
+    out = x2 + y_cm
+    return out, RWKVState(x_tm=x_last_tm, x_cm=x_last_cm, wkv=wkvT)

@@ -1,0 +1,152 @@
+"""Whisper encoder-decoder (audio family).  The conv frontend is a stub per
+the assignment: ``input_specs()`` supplies precomputed frame embeddings
+(B, n_frames, d) — the transformer backbone is fully implemented.
+
+Whisper uses LayerNorm (not RMS), GELU MLPs, sinusoidal encoder positions,
+learned decoder positions, and no RoPE.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import attention
+from repro.models.layers import (gelu_mlp, gelu_mlp_spec, layer_norm,
+                                 layer_norm_spec, sinusoid_positions)
+from repro.models.param import Spec, stack_layers
+from repro.models.plan import Plan
+
+
+def _enc_layer_spec(cfg: ModelConfig, plan: Plan):
+    return {
+        "ln1": layer_norm_spec(cfg.d_model),
+        "attn": attention.gqa_spec(cfg, plan),
+        "ln2": layer_norm_spec(cfg.d_model),
+        "mlp": gelu_mlp_spec(cfg.d_model, plan.padded_ffn(cfg.d_ff)),
+    }
+
+
+def _dec_layer_spec(cfg: ModelConfig, plan: Plan):
+    s = _enc_layer_spec(cfg, plan)
+    s["ln_x"] = layer_norm_spec(cfg.d_model)
+    s["xattn"] = attention.gqa_spec(cfg, plan)
+    return s
+
+
+def whisper_spec(cfg: ModelConfig, plan: Plan, vocab_padded: int,
+                 max_dec_len: int):
+    return {
+        "enc": stack_layers(_enc_layer_spec(cfg, plan), cfg.encoder_layers),
+        "enc_ln": layer_norm_spec(cfg.d_model),
+        "dec": stack_layers(_dec_layer_spec(cfg, plan), cfg.n_layers),
+        "dec_ln": layer_norm_spec(cfg.d_model),
+        "tok_embed": Spec((vocab_padded, cfg.d_model), ("vocab", "embed"),
+                          init="embed"),
+        "pos_embed": Spec((max_dec_len, cfg.d_model), (None, "embed"),
+                          init="embed"),
+    }
+
+
+def encode(params, audio_embeds: jax.Array, cfg: ModelConfig,
+           plan: Plan) -> jax.Array:
+    """audio_embeds (B,F,D) — the conv-frontend stub output."""
+    x = audio_embeds + sinusoid_positions(
+        audio_embeds.shape[1], cfg.d_model).astype(audio_embeds.dtype)
+    hmask = attention.head_mask(cfg, plan)
+
+    # encoder self-attention is bidirectional -> explicit non-causal attend
+    def enc_layer(x, p):
+        h = layer_norm(x, p["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wv"])
+        n_rep = q.shape[2] // k.shape[2]
+        o = attention.attend(q, attention.repeat_kv(k, n_rep),
+                             attention.repeat_kv(v, n_rep), causal=False)
+        if hmask is not None:
+            o = o * hmask[None, None, :, None]
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+        h = layer_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + gelu_mlp(p["mlp"], h)
+        return x, None
+
+    if plan.scan_layers:
+        x, _ = jax.lax.scan(enc_layer, x, params["enc"])
+    else:
+        for i in range(cfg.encoder_layers):
+            x, _ = enc_layer(x, jax.tree.map(lambda a: a[i], params["enc"]))
+    return layer_norm(x, params["enc_ln"], cfg.norm_eps)
+
+
+class WhisperCache(NamedTuple):
+    self_kv: attention.KVCache     # stacked over decoder layers
+    cross_k: jax.Array             # (L,B,F,H,hd) — precomputed from encoder
+    cross_v: jax.Array
+
+
+def _cross_kv(params, enc_out, cfg, plan):
+    def one(p):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wv"])
+        return k, v
+    ks, vs = jax.vmap(one)(params["dec"])
+    return ks, vs
+
+
+def decode_stack(params, x: jax.Array, cfg: ModelConfig, plan: Plan, *,
+                 enc_out=None, cross_kv=None, caches=None,
+                 decode: bool = False, pos0: int = 0):
+    """Decoder over (B,S,D) token embeddings (positions added by caller)."""
+    hmask = attention.head_mask(cfg, plan)
+    if cross_kv is None:
+        cross_kv = _cross_kv(params, enc_out, cfg, plan)
+    cks, cvs = cross_kv
+
+    def layer(carry, pc):
+        x = carry
+        p, ck, cv, cache = pc
+        h = layer_norm(x, p["ln1"], cfg.norm_eps)
+        y, nc = attention.gqa_forward(p["attn"], h, cfg, plan, cache=cache,
+                                      decode=decode, hmask=hmask)
+        x = x + y
+        h = layer_norm(x, p["ln_x"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["xattn"]["wq"])
+        n_rep = q.shape[2] // ck.shape[2]
+        o = attention.attend(q, attention.repeat_kv(ck, n_rep),
+                             attention.repeat_kv(cv, n_rep), causal=False)
+        if hmask is not None:
+            o = o * hmask[None, None, :, None]
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["xattn"]["wo"])
+        h = layer_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + gelu_mlp(p["mlp"], h)
+        return x, nc
+
+    cc = caches if caches is not None else _dummy_caches(params, cfg, plan, x)
+    if plan.scan_layers:
+        x, new_caches = jax.lax.scan(layer, x, (params["dec"], cks, cvs, cc))
+    else:
+        ncs = []
+        for i in range(cfg.n_layers):
+            sl = jax.tree.map(lambda a: a[i], (params["dec"], cks, cvs, cc))
+            x, nc = layer(x, sl)
+            ncs.append(nc)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+    return layer_norm(x, params["dec_ln"], cfg.norm_eps), new_caches
+
+
+def _dummy_caches(params, cfg, plan, x):
+    # training path: per-layer cache of the full sequence (populated, unused)
+    hkv = plan.padded_kv_heads(cfg.n_kv_heads)
+    one = attention.init_kv_cache(x.shape[0], x.shape[1], hkv, cfg.hd, False)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one)
+
+
+def init_caches(cfg: ModelConfig, plan: Plan, batch: int, s_max: int):
+    hkv = plan.padded_kv_heads(cfg.n_kv_heads)
+    one = attention.init_kv_cache(batch, s_max, hkv, cfg.hd, plan.kv_quant)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(), one)

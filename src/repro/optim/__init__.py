@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update  # noqa
+from repro.optim.schedule import cosine_schedule  # noqa
+from repro.optim.compress import ef_int8_compress  # noqa

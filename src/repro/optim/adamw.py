@@ -1,0 +1,60 @@
+"""AdamW with f32 master weights, built for ZeRO-1 sharding.
+
+The optimizer state (m, v, master) is sharded over the DP axes by
+``launch/sharding.zero1_shardings``; the bf16 forward params are re-derived
+from the master copy each step (GSPMD inserts the reduce-scatter on grads and
+the all-gather on params — the ZeRO-2 dataflow).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    master: Any       # f32 master weights
+    count: jax.Array
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return AdamWState(m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros),
+                      master=master,
+                      count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(grads: Any, state: AdamWState, *, lr: jax.Array,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 grad_clip: float = 1.0) -> tuple[Any, AdamWState]:
+    """Returns (new bf16 params, new state)."""
+    count = state.count + 1
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        w = w - lr * (step + weight_decay * w)
+        return m, v, w
+
+    out = jax.tree.map(upd, grads, state.m, state.v, state.master)
+    m = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    params = jax.tree.map(lambda w: w.astype(jnp.bfloat16), master)
+    return params, AdamWState(m=m, v=v, master=master, count=count)

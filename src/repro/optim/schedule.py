@@ -1,0 +1,14 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = peak * s / max(1, warmup)
+    prog = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = peak * (floor_frac + (1 - floor_frac) * 0.5 *
+                  (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,97 @@
+"""Attention-layer unit + property tests (chunked oracle, caches, rope)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention
+from repro.models.layers import rope_angles, apply_rope, mrope_angles
+
+
+def _dense_ref(q, k, v, causal, window=0, kv_len=None, q_offset=0):
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    qp = q_offset + jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    if kv_len is not None:
+        mask &= kp < kv_len
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 3), st.integers(2, 5), st.integers(1, 4),
+       st.booleans(), st.sampled_from([0, 24]))
+def test_chunked_attend_matches_dense(b, s_pow, h, causal, window):
+    S = 2 ** s_pow * 8
+    q = jax.random.normal(jax.random.PRNGKey(b), (b, S, h, 32))
+    k = jax.random.normal(jax.random.PRNGKey(b + 1), (b, S, h, 32))
+    v = jax.random.normal(jax.random.PRNGKey(b + 2), (b, S, h, 32))
+    out = attention.attend(q, k, v, causal=causal, window=window, chunk=16)
+    ref = _dense_ref(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_attend_respects_kv_len():
+    B, S, H, D = 1, 64, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, 1, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, D))
+    out = attention.attend(q, k, v, causal=False, kv_len=10, chunk=16,
+                           q_offset=9)
+    ref = _dense_ref(q, k, v, False, kv_len=10, q_offset=9)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_int8_kv_cache_roundtrip_error_bounded():
+    cache = attention.init_kv_cache(2, 32, 4, 16, quant=True)
+    k = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 16), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 4, 16), jnp.bfloat16)
+    cache = attention.cache_update(cache, k, v, 0)
+    kd, vd = attention.cache_kv(cache)
+    err = float(jnp.max(jnp.abs(kd[:, :8].astype(jnp.float32) -
+                                k.astype(jnp.float32))))
+    scale = float(jnp.max(jnp.abs(k.astype(jnp.float32))))
+    assert err < scale / 64          # int8 quant error bound
+    assert int(cache.length) == 8
+
+
+def test_rope_preserves_norm_and_relativity():
+    B, S, H, D = 1, 16, 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, D))
+    ang = rope_angles(jnp.broadcast_to(jnp.arange(S), (B, S)), D, 10000.0)
+    y = apply_rope(x, ang)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, D))
+    def dot_at(i, j):
+        ai = rope_angles(jnp.array([[i]]), D, 10000.0)
+        aj = rope_angles(jnp.array([[j]]), D, 10000.0)
+        return float(jnp.sum(apply_rope(q, ai) * apply_rope(k, aj)))
+    assert abs(dot_at(3, 1) - dot_at(7, 5)) < 1e-4
+
+
+def test_mrope_sections_cover_dim():
+    ang = mrope_angles(jnp.zeros((3, 1, 4), jnp.int32), 32, 1e6, (4, 6, 6))
+    assert ang.shape == (1, 4, 16)
+
+
+def test_gqa_repeat():
+    x = jnp.arange(2 * 3 * 2 * 4).reshape(2, 3, 2, 4)
+    r = attention.repeat_kv(x, 3)
+    assert r.shape == (2, 3, 6, 4)
+    np.testing.assert_array_equal(np.asarray(r[:, :, 0]),
+                                  np.asarray(r[:, :, 2]))

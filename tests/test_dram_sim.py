@@ -1,0 +1,91 @@
+"""Paper-reproduction checks for the DRAM simulator (core/)."""
+import numpy as np
+import pytest
+
+from repro.core import simulator, traces
+from repro.core.timing import DDR4, MechConfig, paper_config
+
+
+def test_reloc_timing_matches_paper():
+    # §4.2: isolated one-column relocation = 63.5 ns
+    assert abs(DDR4.full_reloc_ns() - 63.5) < 1e-9
+    # fast-subarray reductions (Table 1)
+    assert abs(DDR4.tRCD * DDR4.fast_tRCD_scale - 13.75 * 0.545) < 1e-6
+
+
+def test_paper_configs():
+    fc = paper_config("figcache_fast")
+    assert fc.seg_blocks == 16 and fc.cache_rows == 64
+    assert fc.n_slots == 512          # §8.3: 512 FTS entries per bank
+    lv = paper_config("lisa_villa")
+    assert lv.seg_blocks == 128 and lv.cache_rows == 512
+
+
+@pytest.fixture(scope="module")
+def intensive_results():
+    return simulator.run_single_core("libquantum", n_reqs=8192)
+
+
+def test_mechanism_ordering(intensive_results):
+    """Fig. 7 ordering for an intensive app: ideal >= fast > slow > base;
+    fast > lisa (the paper's headline comparison)."""
+    s = simulator.speedup_summary(intensive_results)
+    assert s["figcache_ideal"] >= s["figcache_fast"] - 1e-6
+    assert s["figcache_fast"] > 1.05
+    assert s["figcache_slow"] > 1.0
+    assert s["figcache_fast"] > s["lisa_villa"]
+    assert s["lldram"] > 1.05
+
+
+def test_row_hit_rate_improves(intensive_results):
+    """Fig. 10: FIGCache raises the row-buffer hit rate; LISA cannot."""
+    r = intensive_results
+    assert r["figcache_fast"].row_hit_rate > r["base"].row_hit_rate + 0.03
+    assert abs(r["lisa_villa"].row_hit_rate - r["base"].row_hit_rate) < 0.01
+
+
+def test_cache_hit_rates_comparable(intensive_results):
+    """Fig. 9: comparable cache hit rates despite 8x smaller cache."""
+    r = intensive_results
+    assert r["figcache_fast"].cache_hit_rate > 0.5
+    assert r["figcache_fast"].cache_hit_rate > \
+        r["lisa_villa"].cache_hit_rate - 0.15
+
+
+def test_energy_reduction(intensive_results):
+    """§8.2: FIGCache-Fast reduces DRAM + system energy vs base."""
+    r = intensive_results
+    assert r["figcache_fast"].dram_energy_nj < r["base"].dram_energy_nj
+    assert r["figcache_fast"].system_energy_nj < r["base"].system_energy_nj
+
+
+def test_non_intensive_small_gains():
+    res = simulator.run_single_core(
+        "sjeng", mechanisms=("base", "figcache_fast"), n_reqs=6144)
+    s = simulator.speedup_summary(res)
+    assert 0.99 < s["figcache_fast"] < 1.12
+
+
+def test_segment_size_peak_at_16():
+    """Fig. 13: 16-block segments beat 8 and 128 (whole-row)."""
+    wl = traces.eight_core_workloads()[17]
+    out = {}
+    for sb in (8, 16, 128):
+        res = simulator.run_eight_core(
+            wl, mechanisms=("base", "figcache_fast"), per_channel=4096,
+            cfg_overrides={"seg_blocks": sb})
+        out[sb] = simulator.speedup_summary(res)["figcache_fast"]
+    assert out[16] > out[8]
+    assert out[16] > out[128]
+
+
+def test_eight_core_intensity_scaling():
+    """Fig. 8: gains grow with memory intensity."""
+    wls = traces.eight_core_workloads()
+    lo = simulator.run_eight_core(
+        wls[0], mechanisms=("base", "figcache_fast"), per_channel=4096)
+    hi = simulator.run_eight_core(
+        wls[17], mechanisms=("base", "figcache_fast"), per_channel=4096)
+    s_lo = simulator.speedup_summary(lo)["figcache_fast"]
+    s_hi = simulator.speedup_summary(hi)["figcache_fast"]
+    assert s_hi > s_lo > 1.0

@@ -1,0 +1,92 @@
+"""FIGCache-KV + embed cache: exactness, warmup, FTS coupling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FIGKVConfig
+from repro.figkv import (figkv_init, figkv_prefill, figkv_decode_step,
+                         embed_cache_init, embed_cache_lookup)
+from repro.figkv.kv_cache import _masked_attend
+
+FIG = FIGKVConfig(seg_tokens=8, fast_rows=4, segs_per_row=4)
+
+
+def _rand(shape, seed, dtype=jnp.bfloat16):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype)
+
+
+def test_full_coverage_equals_exact_attention():
+    B, H, Hkv, D, S0 = 2, 8, 4, 16, 64
+    smax = 128
+    st = figkv_prefill(figkv_init(B, smax, Hkv, D, FIG),
+                       _rand((B, S0, Hkv, D), 0), _rand((B, S0, Hkv, D), 1))
+    ks, vs = [_rand((B, S0, Hkv, D), 0)], [_rand((B, S0, Hkv, D), 1)]
+    step = jax.jit(lambda s, q, k, v: figkv_decode_step(
+        s, q, k, v, FIG, n_sel=smax // FIG.seg_tokens, recent=16))
+    for t in range(6):
+        q = _rand((B, 1, H, D), 100 + t)
+        kn = _rand((B, 1, Hkv, D), 200 + t)
+        vn = _rand((B, 1, Hkv, D), 300 + t)
+        st, out = step(st, q, kn, vn)
+        ks.append(kn); vs.append(vn)
+        K = jnp.repeat(jnp.concatenate(ks, 1), H // Hkv, 2)
+        V = jnp.repeat(jnp.concatenate(vs, 1), H // Hkv, 2)
+        exact = _masked_attend(q, K, V, jnp.ones((B, K.shape[1]), bool))
+        err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                    - exact.astype(jnp.float32))))
+        assert err < 1e-4, (t, err)   # bf16 accumulation-order noise
+
+
+def test_fast_pool_warms_and_serves():
+    B, H, Hkv, D, S0 = 1, 4, 4, 16, 64
+    st = figkv_prefill(figkv_init(B, 256, Hkv, D, FIG),
+                       _rand((B, S0, Hkv, D), 0), _rand((B, S0, Hkv, D), 1))
+    step = jax.jit(lambda s, q, k, v: figkv_decode_step(
+        s, q, k, v, FIG, n_sel=4, recent=16))
+    for t in range(24):
+        st, out = step(st, _rand((B, 1, H, D), t), _rand((B, 1, Hkv, D), t + 50),
+                       _rand((B, 1, Hkv, D), t + 90))
+        assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))
+    warm = int(st.fts.valid.sum())
+    assert warm >= 8  # insert-any-miss filled the pool
+
+
+def test_relocated_segment_matches_pool():
+    """After insertion, the fast-pool copy must equal the slow-pool segment
+    (FIGARO relocation preserves data)."""
+    B, H, Hkv, D, S0 = 1, 4, 4, 16, 64
+    k0, v0 = _rand((B, S0, Hkv, D), 0), _rand((B, S0, Hkv, D), 1)
+    st = figkv_prefill(figkv_init(B, 128, Hkv, D, FIG), k0, v0)
+    step = jax.jit(lambda s, q, k, v: figkv_decode_step(
+        s, q, k, v, FIG, n_sel=4, recent=16))
+    for t in range(8):
+        st, _ = step(st, _rand((B, 1, H, D), t), _rand((B, 1, Hkv, D), t + 10),
+                     _rand((B, 1, Hkv, D), t + 20))
+    stt = FIG.seg_tokens
+    valid = np.asarray(st.fts.valid[0])
+    tags = np.asarray(st.fts.tags[0])
+    pool = np.asarray(st.pool_k[0], np.float32)
+    fast = np.asarray(st.fast_k[0], np.float32)
+    checked = 0
+    for slot in np.nonzero(valid)[0]:
+        seg = int(tags[slot])
+        np.testing.assert_array_equal(fast[slot], pool[seg * stt:(seg + 1) * stt])
+        checked += 1
+    assert checked > 0
+
+
+def test_embed_cache_output_exact():
+    d, V = 32, 512
+    table = _rand((V, d), 7, jnp.float32)
+    cache = embed_cache_init(d, FIG, dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    for step in range(10):
+        toks = jnp.asarray(rng.choice(128, 16), jnp.int32)  # hot prefix
+        cache, out = jax.jit(
+            lambda c, t, s: embed_cache_lookup(c, table, t, FIG, s)
+        )(cache, toks, step)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(table[toks]),
+                                   atol=1e-6)
+    assert int(cache.hits) > 0          # hot segments served from fast table
+    assert int(cache.lookups) == 160

@@ -1,0 +1,119 @@
+"""Property tests for the FTS (paper §5.1) — hypothesis-driven invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fts as fts_lib
+
+SPR = 4
+SLOTS = 16  # 4 rows x 4 segments
+
+
+def _insert(fts, seg, policy="row_benefit"):
+    return fts_lib.insert(fts, jnp.int32(seg), jnp.bool_(False),
+                          jnp.int32(0), policy=policy, segs_per_row=SPR)
+
+
+def test_insert_then_lookup_hits():
+    fts = fts_lib.init(SLOTS, SPR)
+    res = _insert(fts, 42)
+    hit, slot = fts_lib.lookup(res.fts, jnp.int32(42))
+    assert bool(hit) and int(slot) == int(res.slot)
+
+
+def test_free_slots_fill_sequentially():
+    """insert-any-miss packs temporally-adjacent segments into the same row
+    (the co-location property RowBenefit relies on)."""
+    fts = fts_lib.init(SLOTS, SPR)
+    slots = []
+    for s in range(SPR):
+        res = _insert(fts, 100 + s)
+        fts = res.fts
+        slots.append(int(res.slot))
+    assert slots == [0, 1, 2, 3]          # all in cache row 0
+
+
+def test_row_benefit_evicts_lowest_benefit_row():
+    fts = fts_lib.init(SLOTS, SPR)
+    for s in range(SLOTS):               # fill
+        fts = _insert(fts, s).fts
+    # touch everything in rows 1..3 many times; row 0 stays benefit=1
+    for s in range(SPR, SLOTS):
+        hit, slot = fts_lib.lookup(fts, jnp.int32(s))
+        for _ in range(5):
+            fts = fts_lib.touch(fts, slot, jnp.bool_(False), jnp.int32(1), 31)
+    res = _insert(fts, 999)
+    assert int(res.slot) // SPR == 0      # victim from row 0
+    assert bool(res.evicted_valid)
+
+
+def test_row_benefit_bitvector_refills_whole_row():
+    fts = fts_lib.init(SLOTS, SPR)
+    for s in range(SLOTS):
+        fts = _insert(fts, s).fts
+    for s in range(SPR, SLOTS):
+        hit, slot = fts_lib.lookup(fts, jnp.int32(s))
+        fts = fts_lib.touch(fts, slot, jnp.bool_(False), jnp.int32(1), 31)
+    rows = set()
+    for i in range(SPR):                  # next SPR inserts land in one row
+        res = _insert(fts, 1000 + i)
+        fts = res.fts
+        rows.add(int(res.slot) // SPR)
+    assert rows == {0}
+
+
+def test_dirty_eviction_reports_writeback():
+    fts = fts_lib.init(SPR, SPR)          # one row only
+    for s in range(SPR):
+        r = _insert(fts, s)
+        fts = r.fts
+    hit, slot = fts_lib.lookup(fts, jnp.int32(2))
+    fts = fts_lib.touch(fts, slot, jnp.bool_(True), jnp.int32(0), 31)  # dirty
+    # evict everything; exactly one eviction must flag dirty with tag 2
+    dirty_tags = []
+    for i in range(SPR):
+        r = _insert(fts, 50 + i)
+        fts = r.fts
+        if bool(r.evicted_dirty):
+            dirty_tags.append(int(r.evicted_tag))
+    assert dirty_tags == [2]
+
+
+def test_insert_threshold_defers_insertion():
+    fts = fts_lib.init(SLOTS, SPR)
+    ok, fts = fts_lib.should_insert(fts, jnp.int32(7), 3)
+    assert not bool(ok)
+    ok, fts = fts_lib.should_insert(fts, jnp.int32(7), 3)
+    assert not bool(ok)
+    ok, fts = fts_lib.should_insert(fts, jnp.int32(7), 3)
+    assert bool(ok)
+    # a different segment resets the direct-mapped counter
+    ok, fts = fts_lib.should_insert(fts, jnp.int32(7 + 256), 3)
+    assert not bool(ok)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 200), min_size=1, max_size=80),
+       st.sampled_from(["row_benefit", "segment_benefit", "lru", "random"]))
+def test_fts_invariants_under_random_workload(segs, policy):
+    """valid entries always unique; lookup-after-insert always hits;
+    benefit saturates at 2^bits - 1."""
+    fts = fts_lib.init(SLOTS, SPR)
+    step = 0
+    for s in segs:
+        hit, slot = fts_lib.lookup(fts, jnp.int32(s))
+        if bool(hit):
+            fts = fts_lib.touch(fts, slot, jnp.bool_(False),
+                                jnp.int32(step), 31)
+        else:
+            res = fts_lib.insert(fts, jnp.int32(s), jnp.bool_(False),
+                                 jnp.int32(step), policy=policy,
+                                 segs_per_row=SPR)
+            fts = res.fts
+            h2, _ = fts_lib.lookup(fts, jnp.int32(s))
+            assert bool(h2)
+        step += 1
+    tags = np.asarray(fts.tags)[np.asarray(fts.valid)]
+    assert len(set(tags.tolist())) == len(tags)
+    assert int(jnp.max(fts.benefit)) <= 31

@@ -1,0 +1,102 @@
+"""Per-kernel interpret=True validation: shape/dtype sweeps vs ref oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.figaro_reloc.figaro_reloc import reloc
+from repro.kernels.figaro_reloc.ref import reloc_ref
+from repro.kernels.figcache_decode.figcache_decode import figcache_decode
+from repro.kernels.figcache_decode.ref import figcache_decode_ref
+
+
+# ---------------- flash attention ----------------
+
+@pytest.mark.parametrize("BH,S,D,bq,bkv", [
+    (2, 128, 64, 64, 64),
+    (4, 256, 64, 64, 128),
+    (1, 256, 128, 128, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 96)])
+def test_flash_attention_sweep(BH, S, D, bq, bkv, dtype, causal, window):
+    rng = jax.random.PRNGKey(0)
+    q = jax.random.normal(rng, (BH, S, D), dtype)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (BH, S, D), dtype)
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (BH, S, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=bq, block_kv=bkv, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+# ---------------- figaro reloc ----------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 4), st.integers(0, 3))
+def test_reloc_property(n_rows_pow, n_moves, n_masked):
+    n_segs = 2 ** n_rows_pow
+    n_slots = max(2, n_segs // 2)
+    n_moves = min(n_moves, n_slots)   # dst slots drawn without replacement
+    E = 128
+    rng = np.random.default_rng(n_segs + n_moves)
+    pool = jnp.asarray(rng.normal(size=(n_segs, E)), jnp.float32)
+    fast = jnp.asarray(rng.normal(size=(n_slots, E)), jnp.float32)
+    src = rng.choice(n_segs, n_moves, replace=False).astype(np.int32)
+    dst = rng.choice(n_slots, n_moves, replace=False).astype(np.int32)
+    src[:min(n_masked, n_moves)] = -1
+    out = reloc(pool, fast, jnp.asarray(src), jnp.asarray(dst),
+                interpret=True)
+    ref = reloc_ref(pool, fast, jnp.asarray(src), jnp.asarray(dst))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+def test_reloc_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    pool = jnp.asarray(rng.integers(-10, 10, (16, 256)), dtype)
+    fast = jnp.zeros((8, 256), dtype)
+    src = jnp.asarray([3, 7, 11], jnp.int32)
+    dst = jnp.asarray([0, 2, 5], jnp.int32)
+    out = reloc(pool, fast, src, dst, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(pool[3]))
+    np.testing.assert_array_equal(np.asarray(out[5]), np.asarray(pool[11]))
+    np.testing.assert_array_equal(np.asarray(out[1]), 0)
+
+
+# ---------------- figcache decode ----------------
+
+@pytest.mark.parametrize("B,H,L,D,bl", [
+    (2, 4, 512, 64, 128),
+    (1, 8, 256, 128, 256),
+    (3, 2, 384, 64, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_figcache_decode_sweep(B, H, L, D, bl, dtype):
+    rng = jax.random.PRNGKey(1)
+    q = jax.random.normal(rng, (B * H, D), dtype)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B * H, L, D), dtype)
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B * H, L, D), dtype)
+    valid = jax.random.bernoulli(jax.random.fold_in(rng, 3), 0.6, (B, L))
+    valid = valid.at[:, 0].set(True)
+    out = figcache_decode(q, k, v, valid, heads_per_seq=H, block_l=bl,
+                          interpret=True)
+    ref = figcache_decode_ref(q, k, v, jnp.repeat(valid, H, axis=0))
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_figcache_decode_all_invalid_but_one():
+    q = jnp.ones((2, 64), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(0), (2, 256, 64))
+    v = jax.random.normal(jax.random.PRNGKey(1), (2, 256, 64))
+    valid = jnp.zeros((2, 256), bool).at[:, 5].set(True)
+    out = figcache_decode(q, k, v, valid, heads_per_seq=1, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v[:, 5]),
+                               atol=1e-5)

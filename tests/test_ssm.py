@@ -1,0 +1,110 @@
+"""Property tests for the chunked SSM implementations: the chunked scans
+(memory optimization) must be exactly equivalent to naive per-step
+recurrences, and decode must continue prefill state seamlessly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import mamba, rwkv6
+from repro.models.plan import Plan
+
+
+def _mamba_naive(p, x, cfg):
+    """Reference: unchunked per-step recurrence."""
+    d_in, dtr, n, dc = mamba._dims(cfg)
+    B, S, _ = x.shape
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, _ = mamba._causal_conv(xi, p["conv_w"], p["conv_b"], None)
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(x.dtype)
+    dbc = xi @ p["x_proj"]
+    dt_r, Bc, Cc = jnp.split(dbc, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus((dt_r @ p["dt_proj"] + p["dt_bias"]).astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h = jnp.zeros((B, d_in, n), jnp.float32)
+    ys = []
+    for t in range(S):
+        dA = jnp.exp(dt[:, t, :, None] * A)
+        dBx = (dt[:, t] * xi[:, t].astype(jnp.float32))[..., None] * \
+            Bc[:, t].astype(jnp.float32)[:, None, :]
+        h = h * dA + dBx
+        ys.append(jnp.einsum("bdn,bn->bd", h, Cc[:, t].astype(jnp.float32)))
+    y = jnp.stack(ys, 1)
+    y = y + xi.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return y.astype(x.dtype) @ p["out_proj"]
+
+
+def test_mamba_chunked_equals_naive():
+    cfg = configs.get_reduced("jamba-v0.1-52b")
+    from repro.models.param import init_params
+    p = init_params(mamba.mamba_spec(cfg, Plan()), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model),
+                          jnp.float32) * 0.1
+    p = jax.tree.map(lambda a: a.astype(jnp.float32), p)
+    out_c, _ = mamba.mamba_forward(p, x, cfg, Plan(), chunk=8)
+    out_n = _mamba_naive(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_n),
+                               atol=1e-4)
+
+
+def test_mamba_decode_continues_prefill():
+    cfg = configs.get_reduced("jamba-v0.1-52b")
+    from repro.models.param import init_params
+    p = init_params(mamba.mamba_spec(cfg, Plan()), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 24, cfg.d_model),
+                          jnp.bfloat16) * 0.1
+    full, _ = mamba.mamba_forward(p, x, cfg, Plan(), chunk=8)
+    st = mamba.init_state(cfg, 1)
+    out, st = mamba.mamba_forward(p, x[:, :20], cfg, Plan(), state=st,
+                                  chunk=8)
+    errs = []
+    for t in range(20, 24):
+        o, st = mamba.mamba_forward(p, x[:, t:t + 1], cfg, Plan(), state=st,
+                                    decode=True)
+        errs.append(float(jnp.max(jnp.abs(
+            o.astype(jnp.float32) - full[:, t:t + 1].astype(jnp.float32)))))
+    assert max(errs) < 5e-2, errs
+
+
+def test_rwkv_chunked_equals_single_chunk():
+    cfg = configs.get_reduced("rwkv6-3b")
+    from repro.models.param import init_params
+    p = init_params(rwkv6.rwkv_spec(cfg, Plan()), jax.random.PRNGKey(2))
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 32, cfg.d_model),
+                          jnp.float32) * 0.1
+    p = jax.tree.map(lambda a: a.astype(jnp.float32), p)
+    y1, (xl1, w1) = rwkv6.time_mix(p["tm"], x, cfg, chunk=8)
+    y2, (xl2, w2) = rwkv6.time_mix(p["tm"], x, cfg, chunk=64)  # single chunk
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=1e-4)
+
+
+def test_rwkv_decode_continues_prefill():
+    cfg = configs.get_reduced("rwkv6-3b")
+    from repro.models.param import init_params
+    p = init_params(rwkv6.rwkv_spec(cfg, Plan()), jax.random.PRNGKey(4))
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 16, cfg.d_model),
+                          jnp.bfloat16) * 0.1
+    full, _ = rwkv6.rwkv_block(p, x, cfg, Plan())
+    st = rwkv6.init_state(cfg, 1)
+    out, st = rwkv6.rwkv_block(p, x[:, :12], cfg, Plan(), state=st)
+    errs = []
+    for t in range(12, 16):
+        o, st = rwkv6.rwkv_block(p, x[:, t:t + 1], cfg, Plan(), state=st)
+        errs.append(float(jnp.max(jnp.abs(
+            o.astype(jnp.float32) - full[:, t:t + 1].astype(jnp.float32)))))
+    assert max(errs) < 5e-2, errs
+
+
+def test_banded_swa_equals_masked():
+    from repro.models.attention import attend, banded_attend
+    B, S, H, D, w = 1, 2048, 2, 16, 1024
+    q = jax.random.normal(jax.random.PRNGKey(6), (B, S, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(7), (B, S, H, D))
+    v = jax.random.normal(jax.random.PRNGKey(8), (B, S, H, D))
+    a = banded_attend(q, k, v, window=w, chunk=1024)
+    b = attend(q, k, v, causal=True, window=w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
