@@ -1,4 +1,4 @@
-"""Shared benchmark plumbing: cached workload runs, CSV row helpers."""
+"""Shared benchmark plumbing: cached traces/workload runs, sweep-grid helpers."""
 from __future__ import annotations
 
 import functools
@@ -10,6 +10,18 @@ from repro.core import simulator, traces
 
 QUICK_REQS_1CORE = 10240
 QUICK_REQS_8CORE = 6144
+LONG_REQS_8CORE = 12288   # figs 12/14: enough traffic for eviction pressure
+
+
+def set_quick() -> None:
+    """Shrink every trace for CI smoke runs (``benchmarks/run.py --quick``)."""
+    global QUICK_REQS_1CORE, QUICK_REQS_8CORE, LONG_REQS_8CORE
+    QUICK_REQS_1CORE = 2048
+    QUICK_REQS_8CORE = 1024
+    LONG_REQS_8CORE = 2048
+    single_core.cache_clear()
+    eight_core.cache_clear()
+    eight_trace.cache_clear()
 
 
 @functools.lru_cache(maxsize=None)
@@ -26,6 +38,21 @@ def eight_core(idx: int, mechs=simulator.PAPER_MECHS, per_channel=None,
     return simulator.run_eight_core(
         wl, mechanisms=mechs, per_channel=per_channel or QUICK_REQS_8CORE,
         cfg_overrides=dict(over) or None)
+
+
+@functools.lru_cache(maxsize=None)
+def eight_trace(idx: int, per_channel=None, seed: int = 2):
+    """The (trace, apps) of one multiprogrammed workload, built once."""
+    name, frac, apps = traces.eight_core_workloads()[idx]
+    tr = traces.build_trace(apps, 4, per_channel or QUICK_REQS_8CORE, seed)
+    return tr, tuple(apps)
+
+
+def eight_core_grid(idx: int, cfgs, per_channel=None):
+    """Sweep an arbitrary config grid over one workload — one compiled scan
+    per static structure (simulator.sweep)."""
+    tr, apps = eight_trace(idx, per_channel)
+    return simulator.sweep(tr, list(cfgs), apps)
 
 
 # two workloads per intensity class for quick benches

@@ -1,23 +1,35 @@
-"""Figure 12: in-DRAM cache capacity sweep (fast subarrays 1..16)."""
+"""Figure 12: in-DRAM cache capacity sweep (fast subarrays 1..16).
+
+The whole capacity grid for one workload is dispatched as a single
+``simulator.sweep`` call; capacity changes the FTS shape (``n_slots``), so
+each point is its own static structure — the sweep engine still dedupes the
+base config and reuses every compilation across workloads.
+"""
 import numpy as np
 
 from benchmarks import common
 from repro.core import simulator
+from repro.core.timing import paper_config
+
+POINTS = [(1, 4), (2, 8), (4, 16), (8, 32), (16, 64)]
 
 
 def run():
     rows = []
     summary = {}
-    for n_fs, cache_rows in [(1, 4), (2, 8), (4, 16), (8, 32), (16, 64)]:
-        # quick traces under-fill the cache: scale rows down 8x so the sweep
-        # exercises the same fill fraction the paper's full runs see
-        sp = []
-        for i in (common.WL_IDX[50][0], common.WL_IDX[100][1]):
-            res = common.eight_core(i, mechs=("base", "figcache_fast"),
-                                    per_channel=12288,
-                                    cache_rows=cache_rows)
-            sp.append(simulator.speedup_summary(res)["figcache_fast"])
-        summary[f"FS={n_fs}"] = round(float(np.mean(sp)), 4)
+    # quick traces under-fill the cache: scale rows down 8x so the sweep
+    # exercises the same fill fraction the paper's full runs see
+    cfgs = [paper_config("base")] + [
+        paper_config("figcache_fast", cache_rows=cr) for _, cr in POINTS]
+    sp = {n_fs: [] for n_fs, _ in POINTS}
+    for i in (common.WL_IDX[50][0], common.WL_IDX[100][1]):
+        res = common.eight_core_grid(i, cfgs,
+                                     per_channel=common.LONG_REQS_8CORE)
+        base = res[0]
+        for (n_fs, _), r in zip(POINTS, res[1:]):
+            sp[n_fs].append(simulator.speedup(r, base))
+    for n_fs, cache_rows in POINTS:
+        summary[f"FS={n_fs}"] = round(float(np.mean(sp[n_fs])), 4)
         rows.append({"fast_subarrays": n_fs, "cache_rows": cache_rows,
                      "wspeedup": summary[f"FS={n_fs}"]})
     # paper: diminishing returns past 2 fast subarrays

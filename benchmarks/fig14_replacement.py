@@ -1,23 +1,33 @@
 """Figure 14: replacement policy sweep (RowBenefit vs SegmentBenefit/LRU/
 Random).  Uses longer traces + a smaller cache so eviction pressure is real.
+
+The grid goes through ``simulator.sweep``; policy is a trace-time branch
+(static), so the four policies compile four scans — shared across workloads.
 """
 import numpy as np
 
 from benchmarks import common
 from repro.core import simulator
+from repro.core.timing import paper_config
+
+POLICIES = ("row_benefit", "segment_benefit", "lru", "random")
 
 
 def run():
     rows = []
     summary = {}
-    for pol in ("row_benefit", "segment_benefit", "lru", "random"):
-        sp = []
-        for i in (common.WL_IDX[50][0], common.WL_IDX[100][1]):
-            res = common.eight_core(i, mechs=("base", "figcache_fast"),
-                                    per_channel=12288, policy=pol,
-                                    cache_rows=4)   # real eviction pressure
-            sp.append(simulator.speedup_summary(res)["figcache_fast"])
-        summary[pol] = round(float(np.mean(sp)), 4)
+    cfgs = [paper_config("base")] + [
+        paper_config("figcache_fast", policy=pol, cache_rows=4)
+        for pol in POLICIES]   # cache_rows=4: real eviction pressure
+    sp = {pol: [] for pol in POLICIES}
+    for i in (common.WL_IDX[50][0], common.WL_IDX[100][1]):
+        res = common.eight_core_grid(i, cfgs,
+                                     per_channel=common.LONG_REQS_8CORE)
+        base = res[0]
+        for pol, r in zip(POLICIES, res[1:]):
+            sp[pol].append(simulator.speedup(r, base))
+    for pol in POLICIES:
+        summary[pol] = round(float(np.mean(sp[pol])), 4)
         rows.append({"policy": pol, "wspeedup": summary[pol]})
     return rows, summary
 

@@ -1,19 +1,32 @@
 """Benchmark entrypoint — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV (derived = the headline metric the
-paper reports for that figure).
+paper reports for that figure).  ``--quick`` shrinks every trace for CI
+smoke runs; ``--only a,b`` restricts to a comma-separated subset of names.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
 
-def main() -> None:
-    from benchmarks import (fig07_single_core, fig08_eight_core,
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small traces for CI smoke runs")
+    ap.add_argument("--only", default="",
+                    help="comma-separated benchmark names to run")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (common, fig07_single_core, fig08_eight_core,
                             fig09_cache_hit, fig10_row_hit, fig11_energy,
                             fig12_capacity, fig13_segment_size,
-                            fig14_replacement, fig15_insertion, overhead)
+                            fig14_replacement, fig15_insertion, overhead,
+                            sweep_engine)
+
+    if args.quick:
+        common.set_quick()
 
     benches = [
         ("fig07_single_core", fig07_single_core,
@@ -31,27 +44,38 @@ def main() -> None:
         ("fig14_replacement", fig14_replacement,
          lambda s: s.get("row_benefit")),
         ("fig15_insertion", fig15_insertion, lambda s: s.get("th=1")),
+        ("sweep_engine", sweep_engine,
+         lambda s: f"jits {s['jits_before']}->{s['jits_after']}"),
         ("overhead_table", overhead,
          lambda s: s.get("fts_kB_per_channel")),
     ]
+    only = {n for n in args.only.split(",") if n}
+    known = {n for n, _, _ in benches} | {"roofline"}
+    unknown = only - known
+    if unknown:
+        ap.error(f"unknown benchmark(s) {sorted(unknown)}; "
+                 f"choose from {sorted(known)}")
     print("name,us_per_call,derived")
     details = {}
     for name, mod, pick in benches:
+        if only and name not in only:
+            continue
         t0 = time.time()
         rows, summary = mod.run()
         us = (time.time() - t0) * 1e6
         print(f"{name},{us:.0f},{pick(summary)}", flush=True)
         details[name] = summary
     # roofline table is read from dry-run artifacts (no compute)
-    try:
-        from benchmarks import roofline
-        t0 = time.time()
-        rows, summary = roofline.run()
-        us = (time.time() - t0) * 1e6
-        print(f"roofline,{us:.0f},{summary['mean_roofline_frac']}")
-        details["roofline"] = summary
-    except Exception as e:  # dry-run not yet executed
-        print(f"roofline,0,unavailable({e})")
+    if not only or "roofline" in only:
+        try:
+            from benchmarks import roofline
+            t0 = time.time()
+            rows, summary = roofline.run()
+            us = (time.time() - t0) * 1e6
+            print(f"roofline,{us:.0f},{summary['mean_roofline_frac']}")
+            details["roofline"] = summary
+        except Exception as e:  # dry-run not yet executed
+            print(f"roofline,0,unavailable({e})")
     print("\n# summaries", file=sys.stderr)
     for k, v in details.items():
         print(k, v, file=sys.stderr)

@@ -1,0 +1,78 @@
+"""Sweep-engine microbenchmark: jit count + us-per-config, before vs after.
+
+"Before" reproduces the seed's dispatch: every ``MechConfig`` point gets its
+own freshly-jitted scan (params baked into the compilation), so a grid of N
+configs costs N compilations.  "After" is the sweep engine: the same grid
+shares one static structure, so ``dram.run_sweep`` compiles ONE scan and
+vmaps it over the stacked ``MechParams`` batch (DESIGN.md §3).
+
+Compilations are counted via ``dram.JIT_TRACE_LOG`` (the scan body logs one
+entry per trace).  The two modes are also cross-checked for bitwise-equal
+counters, so the speedup is not bought with a semantics change.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import dram
+from repro.core.timing import paper_config
+
+# 8 configs, one static structure: threshold x benefit_bits grid
+GRID = [dict(insert_threshold=th, benefit_bits=bb)
+        for th in (1, 2, 4, 8) for bb in (4, 5)]
+
+
+def run():
+    cfgs = [paper_config("figcache_fast", **kw) for kw in GRID]
+    static = cfgs[0].static
+    assert all(c.static == static for c in cfgs), "grid must share a static"
+    tr, _apps = common.eight_trace(common.WL_IDX[100][1], per_channel=2048)
+
+    # ---- before: per-config fresh jit (seed behavior) ---------------------
+    j0 = dram.jit_trace_count()
+    t0 = time.time()
+    before = []
+    for cfg in cfgs:
+        p = cfg.params()
+        # params baked into the closure == one distinct compilation per
+        # config point, exactly like the seed's make_step(cfg)
+        f = jax.jit(lambda t, p=p: dram.simulate(t, static, p))
+        before.append(jax.block_until_ready(f(tr)))
+    t_before = time.time() - t0
+    jits_before = dram.jit_trace_count() - j0
+
+    # ---- after: one compiled scan, vmapped over the params batch ----------
+    batch = jax.tree.map(lambda *xs: jnp.stack(xs),
+                         *[c.params() for c in cfgs])
+    j1 = dram.jit_trace_count()
+    t0 = time.time()
+    after = jax.block_until_ready(dram.run_sweep(tr, static, batch))
+    t_after = time.time() - t0
+    jits_after = dram.jit_trace_count() - j1
+
+    # same physics in both modes, bit for bit
+    for i, cnt in enumerate(before):
+        for a, b in zip(cnt, jax.tree.map(lambda x, i=i: x[i], after)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                f"sweep engine diverged from per-config run at config {i}"
+
+    n = len(cfgs)
+    summary = {
+        "n_configs": n,
+        "jits_before": jits_before,
+        "jits_after": jits_after,
+        "us_per_config_before": round(t_before / n * 1e6),
+        "us_per_config_after": round(t_after / n * 1e6),
+        "wall_speedup": round(t_before / max(t_after, 1e-9), 2),
+    }
+    rows = [summary]
+    return rows, summary
+
+
+if __name__ == "__main__":
+    print(run()[1])

@@ -14,17 +14,26 @@ Modeling abstractions (documented in DESIGN.md §7):
    MLP-weighted latency→CPI conversion in ``simulator.py``.
 
 Timestamps are int32 ticks (1/8 ns).  Latency accumulators are int32 ns.
+
+Sweep engine (DESIGN.md §3): the scan body is built from the *static* half of
+a config only (``timing.StaticConfig`` — shapes and trace-time branches); all
+remaining knobs arrive as a traced ``timing.MechParams`` pytree.  One
+compilation therefore serves every config sharing a static structure, and
+``run_sweep`` vmaps the very same scan over a stacked params batch so a whole
+config grid executes as one XLA program — the harness-side analogue of the
+relocation-granularity waste FIGARO removes in hardware.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import List, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import fts as fts_lib
-from repro.core.timing import DDR4, GEOM, MechConfig, DRAMTimings, DRAMGeometry
+from repro.core.timing import (DDR4, GEOM, DRAMGeometry, DRAMTimings,
+                               MechConfig, MechParams, StaticConfig)
 
 
 class Trace(NamedTuple):
@@ -41,6 +50,20 @@ class Trace(NamedTuple):
 
 
 N_MSHR = 8  # outstanding misses per core (paper Table 1) — closed-loop throttle
+
+# Every trace of a simulator scan (== one XLA compilation) appends a tag here.
+# ``benchmarks/sweep_engine.py`` reads it to report jit counts; tests use it
+# to assert "one compiled scan per static structure".
+JIT_TRACE_LOG: List[str] = []
+
+
+def _note_trace(tag: str) -> None:
+    """Record one jit trace.  Runs only while JAX traces (i.e. per compile)."""
+    JIT_TRACE_LOG.append(tag)
+
+
+def jit_trace_count() -> int:
+    return len(JIT_TRACE_LOG)
 
 
 class BankState(NamedTuple):
@@ -67,9 +90,11 @@ class Counters(NamedTuple):
     t_end: jax.Array           # ticks
 
 
-def init_state(cfg: MechConfig, geom: DRAMGeometry = GEOM) -> BankState:
-    n_slots = cfg.n_slots if cfg.has_cache else 1
-    spr = cfg.segs_per_row if cfg.has_cache else 1
+def init_state(static: StaticConfig, geom: DRAMGeometry = GEOM) -> BankState:
+    """Initial per-bank state.  Accepts a ``StaticConfig`` (or any object
+    with ``has_cache``/``n_slots``/``segs_per_row``, e.g. a ``MechConfig``)."""
+    n_slots = static.n_slots if static.has_cache else 1
+    spr = static.segs_per_row if static.has_cache else 1
     one = fts_lib.init(n_slots, spr)
     fts = jax.tree.map(
         lambda a: jnp.broadcast_to(a, (geom.n_banks,) + a.shape).copy(), one)
@@ -99,19 +124,24 @@ def _lisa_hops(row: jax.Array, geom: DRAMGeometry) -> jax.Array:
     return jnp.minimum(m, 4 - m)
 
 
-def make_step(cfg: MechConfig, t: DRAMTimings = DDR4,
-              geom: DRAMGeometry = GEOM):
-    """Build the scan body for one mechanism (static config => one jit)."""
-    spr = cfg.segs_per_row if cfg.has_cache else 1
-    benefit_max = (1 << cfg.benefit_bits) - 1
+def make_step(static: StaticConfig, geom: DRAMGeometry = GEOM):
+    """Build the scan body for one *static structure*.
+
+    The returned ``step(params, carry, req)`` closes over shapes and
+    trace-time branches only; every numeric knob comes in through the traced
+    ``params`` (``timing.MechParams``), so one compilation of the scan serves
+    arbitrarily many configs sharing ``static`` (DESIGN.md §3).
+    """
+    spr = static.segs_per_row if static.has_cache else 1
     cache_base = jnp.int32(geom.n_rows)           # id-space for cache rows
     reserved_sub = geom.n_subarrays - 1           # figcache_slow region
-    lisa = cfg.mechanism == "lisa_villa"
-    slow_cache = cfg.mechanism == "figcache_slow"
-    lldram = cfg.mechanism == "lldram"
+    lisa = static.mechanism == "lisa_villa"
+    slow_cache = static.mechanism == "figcache_slow"
+    lldram = static.mechanism == "lldram"
 
-    def step(carry, req):
+    def step(params: MechParams, carry, req):
         state, cnt = carry
+        p = params
         bank = req.bank
         fts_b = jax.tree.map(lambda a: a[bank], state.fts)
         # closed loop: a core may not have more than N_MSHR requests in
@@ -123,8 +153,8 @@ def make_step(cfg: MechConfig, t: DRAMTimings = DDR4,
         step_id = cnt.reads + cnt.writes
 
         # ---- cache lookup -------------------------------------------------
-        if cfg.has_cache:
-            seg = req.row * spr + req.col // cfg.seg_blocks
+        if static.has_cache:
+            seg = req.row * spr + req.col // p.seg_blocks
             if slow_cache:   # never cache the subarray hosting reserved rows
                 cacheable = (req.row // geom.rows_per_subarray) != reserved_sub
             else:
@@ -139,58 +169,65 @@ def make_step(cfg: MechConfig, t: DRAMTimings = DDR4,
         target_row = jnp.where(hit, cache_base + slot // spr, req.row)
 
         # ---- service latency ---------------------------------------------
-        served_fast = (hit & cfg.fast_cache) | lldram
-        rcd = jnp.where(served_fast, t.rcd_fast, t.rcd)
-        rp = jnp.where(served_fast, t.rp_fast, t.rp)
+        served_fast = (hit & static.fast_cache) | lldram
+        rcd = jnp.where(served_fast, p.rcd_fast, p.rcd)
+        rp = jnp.where(served_fast, p.rp_fast, p.rp)
         row_hit = open_b == target_row
         closed = open_b < 0
         pre_act = jnp.where(row_hit, 0, rcd + jnp.where(closed, 0, rp))
         # the 64 B burst serializes on the shared channel data bus — a
         # contention source no in-DRAM cache can relieve
-        done = jnp.maximum(t0 + pre_act + t.cas, state.bus_free) + t.bl
+        done = jnp.maximum(t0 + pre_act + p.cas, state.bus_free) + p.bl
         # bank occupancy: column accesses pipeline at tCCD; an ACT(+PRE)
         # occupies the bank for its own duration before the CAS can pipeline
-        serv_end = t0 + pre_act + t.ccd
+        serv_end = t0 + pre_act + p.ccd
 
         # ---- miss path: insert-any-miss (+ optional threshold) ------------
-        if cfg.has_cache:
-            want, fts_b = fts_lib.should_insert(fts_b, seg, cfg.insert_threshold)
+        if static.has_cache:
+            # the consecutive-miss tracker advances on actual (cacheable)
+            # misses only; the hit path below is built from the pre-tracker
+            # ``fts_b`` so hits leave the miss counters untouched
+            want, fts_miss = fts_lib.should_insert(fts_b, seg,
+                                                   p.insert_threshold)
+            fts_miss = jax.tree.map(
+                lambda m, b: jnp.where(cacheable, m, b), fts_miss, fts_b)
             do_ins = ~hit & cacheable & want
-            ins = fts_lib.insert(fts_b, seg, req.is_write, step_id,
-                                 policy=cfg.policy, segs_per_row=spr)
-            if cfg.free_reloc:
+            ins = fts_lib.insert(fts_miss, seg, req.is_write, step_id,
+                                 policy=static.policy, segs_per_row=spr)
+            if static.free_reloc:
                 reloc_cost = jnp.int32(0)
             elif lisa:
                 # whole-row relocation, distance-dependent (src row is open)
                 hops = _lisa_hops(req.row, geom)
-                reloc_cost = hops * t.lisa_hop + t.rcd_fast
+                reloc_cost = hops * p.lisa_hop + p.rcd_fast
                 wb_hops = _lisa_hops(ins.evicted_tag, geom)
                 reloc_cost += jnp.where(
-                    ins.evicted_dirty, wb_hops * t.lisa_hop + t.rcd, 0)
+                    ins.evicted_dirty, wb_hops * p.lisa_hop + p.rcd, 0)
             else:
                 # FIGARO: seg_blocks RELOCs through the GRB.  The source row
                 # is already open serving the miss (§8.1) and the destination
                 # ACT overlaps via the per-subarray row-address latch (§4.1
                 # "multiple activations without a precharge"), so only the
                 # RELOC column transfers occupy the bank's column path.
-                reloc_cost = cfg.seg_blocks * t.reloc
+                reloc_cost = p.seg_blocks * p.reloc
                 # dirty-victim writeback needs the victim's home row opened
                 reloc_cost += jnp.where(
                     ins.evicted_dirty,
-                    cfg.seg_blocks * t.reloc + t.rcd, 0)
+                    p.seg_blocks * p.reloc + p.rcd, 0)
             reloc_cost = jnp.where(do_ins, reloc_cost, 0)
             # after insertion the destination cache row is left open
             new_open = jnp.where(
                 do_ins, cache_base + ins.slot // spr, target_row)
             touched = fts_lib.touch(fts_b, slot, req.is_write, step_id,
-                                    benefit_max)
+                                    p.benefit_max)
             sel3 = lambda h, i, a, b, c: jnp.where(h, a, jnp.where(i, b, c))
             fts_new = jax.tree.map(
-                functools.partial(sel3, hit, do_ins), touched, ins.fts, fts_b)
+                functools.partial(sel3, hit, do_ins),
+                touched, ins.fts, fts_miss)
             new_fts = jax.tree.map(
                 lambda full, one: full.at[bank].set(one), state.fts, fts_new)
-            moved = jnp.where(do_ins, cfg.seg_blocks, 0)
-            wb = jnp.where(do_ins & ins.evicted_dirty, cfg.seg_blocks, 0)
+            moved = jnp.where(do_ins, p.seg_blocks, 0)
+            wb = jnp.where(do_ins & ins.evicted_dirty, p.seg_blocks, 0)
             n_ins = do_ins.astype(jnp.int32)
         else:
             reloc_cost = jnp.int32(0)
@@ -224,30 +261,66 @@ def make_step(cfg: MechConfig, t: DRAMTimings = DDR4,
             insertions=cnt.insertions + n_ins,
             lat_sum_ns=cnt.lat_sum_ns.at[req.core].add(lat_ns),
             req_cnt=cnt.req_cnt.at[req.core].add(1),
-            t_end=jnp.maximum(cnt.t_end, serv_end + reloc_cost),
+            # the request is not retired until its burst clears the shared
+            # data bus, which can outlast the bank's own serv_end+reloc —
+            # take the max over *both* (execution time feeds core/energy.py)
+            t_end=jnp.maximum(cnt.t_end,
+                              jnp.maximum(done, serv_end + reloc_cost)),
         )
         return (state, cnt), None
 
     return step
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
-def run_channel(trace: Trace, cfg: MechConfig) -> Counters:
-    """Simulate one channel's request stream."""
-    step = make_step(cfg)
-    carry0 = (init_state(cfg), init_counters())
-    (_, cnt), _ = jax.lax.scan(step, carry0, trace)
+def _scan_one(step, params: MechParams, trace: Trace,
+              static: StaticConfig) -> Counters:
+    carry0 = (init_state(static), init_counters())
+    (_, cnt), _ = jax.lax.scan(functools.partial(step, params), carry0, trace)
     return cnt
 
 
+def simulate(trace: Trace, static: StaticConfig,
+             params: MechParams) -> Counters:
+    """Un-jitted reference: one params point, (T,) or (C, T) trace leaves."""
+    if isinstance(trace.t_issue, jax.core.Tracer):
+        # log only when called under a jit trace (== one compilation);
+        # eager reference runs must not inflate the jit count
+        _note_trace(f"simulate/{static.mechanism}")
+    step = make_step(static)
+    if trace.t_issue.ndim == 1:
+        return _scan_one(step, params, trace, static)
+    return jax.vmap(lambda tr: _scan_one(step, params, tr, static))(trace)
+
+
+_simulate_jit = jax.jit(simulate, static_argnums=(1,))
+
+
 @functools.partial(jax.jit, static_argnums=(1,))
-def run_channels(traces: Trace, cfg: MechConfig) -> Counters:
+def run_sweep(trace: Trace, static: StaticConfig,
+              params_batch: MechParams) -> Counters:
+    """Run a whole config grid sharing one static structure in ONE program.
+
+    ``params_batch`` leaves carry a leading batch axis (P,).  Returns
+    ``Counters`` with leading (P,) — or (P, C) for multi-channel traces —
+    bitwise-equal to running each params point through ``run_channel``.
+    """
+    _note_trace(f"sweep/{static.mechanism}")
+    step = make_step(static)
+    if trace.t_issue.ndim == 1:
+        one = lambda p: _scan_one(step, p, trace, static)
+    else:
+        one = lambda p: jax.vmap(
+            lambda tr: _scan_one(step, p, tr, static))(trace)
+    return jax.vmap(one)(params_batch)
+
+
+def run_channel(trace: Trace, cfg: MechConfig,
+                t: DRAMTimings = DDR4) -> Counters:
+    """Simulate one channel's request stream ((T,) trace leaves)."""
+    return _simulate_jit(trace, cfg.static, cfg.params(t))
+
+
+def run_channels(traces: Trace, cfg: MechConfig,
+                 t: DRAMTimings = DDR4) -> Counters:
     """Simulate C independent channels: traces leaves shaped (C, T)."""
-    step = make_step(cfg)
-
-    def one(tr):
-        carry0 = (init_state(cfg), init_counters())
-        (_, cnt), _ = jax.lax.scan(step, carry0, tr)
-        return cnt
-
-    return jax.vmap(one)(traces)
+    return _simulate_jit(traces, cfg.static, cfg.params(t))

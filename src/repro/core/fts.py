@@ -54,8 +54,10 @@ def lookup(fts: FTS, seg: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
 
 def touch(fts: FTS, slot: jax.Array, is_write: jax.Array, step: jax.Array,
-          benefit_max: int) -> FTS:
-    """Cache hit: increment saturating benefit, set dirty on writes (§5.1)."""
+          benefit_max) -> FTS:
+    """Cache hit: increment saturating benefit, set dirty on writes (§5.1).
+
+    ``benefit_max`` may be a Python int or a traced int32 (sweep engine)."""
     b = jnp.minimum(fts.benefit[slot] + 1, benefit_max)
     return fts._replace(
         benefit=fts.benefit.at[slot].set(b),
@@ -64,21 +66,26 @@ def touch(fts: FTS, slot: jax.Array, is_write: jax.Array, step: jax.Array,
     )
 
 
-def should_insert(fts: FTS, seg: jax.Array, threshold: int) -> Tuple[jax.Array, FTS]:
+def should_insert(fts: FTS, seg: jax.Array, threshold) -> Tuple[jax.Array, FTS]:
     """Insertion policy (§9.4).  threshold=1 == insert-any-miss (default).
 
     Higher thresholds track consecutive misses per segment in a small
     direct-mapped counter table (the 'additional metadata' §9.4 mentions).
+
+    ``threshold`` may be a *traced* int32 (sweep engine, DESIGN.md §3), so
+    the decision is branchless: the tracker is always advanced and the
+    returned verdict is ``threshold <= 1 or count >= threshold``.  Callers
+    must invoke this on actual (cacheable) misses only — the tracker counts
+    consecutive misses, and advancing it on hits inflates the counts.
     """
-    if threshold <= 1:
-        return jnp.bool_(True), fts
     n = fts.miss_tags.shape[0]
     idx = jnp.remainder(seg, n)
     same = fts.miss_tags[idx] == seg
     cnt = jnp.where(same, fts.miss_cnt[idx] + 1, 1)
     fts = fts._replace(miss_tags=fts.miss_tags.at[idx].set(seg),
                        miss_cnt=fts.miss_cnt.at[idx].set(cnt))
-    return cnt >= threshold, fts
+    thr = jnp.asarray(threshold, jnp.int32)
+    return (thr <= 1) | (cnt >= thr), fts
 
 
 def _pick_victim_row_benefit(fts: FTS, segs_per_row: int):

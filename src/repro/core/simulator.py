@@ -10,18 +10,26 @@ latency-to-CPI conversion:
 Single-core results report IPC speedup vs Base; multiprogrammed results report
 weighted speedup (paper §7, [133]).  Every mechanism sees the *same* trace, so
 speedups isolate the memory system exactly as in the paper.
+
+Sweeps (DESIGN.md §3): ``sweep`` takes an arbitrary list of ``MechConfig``
+points, groups them by their ``StaticConfig`` (the shape-determining half),
+and dispatches each group as ONE ``dram.run_sweep`` call — a single compiled
+scan vmapped over the stacked dynamic params.  ``run_single_core`` /
+``run_eight_core`` are thin wrappers that sweep one config per mechanism.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Sequence
+from typing import Dict, List, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dram, traces
 from repro.core.energy import ENERGY
-from repro.core.timing import GEOM, MechConfig, paper_config
+from repro.core.timing import DDR4, GEOM, DRAMTimings, MechConfig, paper_config
 
 CPU_GHZ = 3.2
 CPI_EXEC = 0.4          # 3-wide OoO issue
@@ -46,7 +54,7 @@ class RunResult:
     counters: object
 
 
-def _per_core_latency(cnt) -> np.ndarray:
+def _per_core_latency(cnt) -> Tuple[np.ndarray, np.ndarray]:
     lat = np.asarray(cnt.lat_sum_ns, dtype=np.float64)
     req = np.asarray(cnt.req_cnt, dtype=np.float64)
     if lat.ndim == 2:            # (channels, cores) -> sum over channels
@@ -67,17 +75,15 @@ def _ipc_model(avg_lat_ns, req, apps) -> np.ndarray:
     return np.array(ipcs)
 
 
-def run_mechanism(trace: dram.Trace, cfg: MechConfig,
-                  apps: Sequence[traces.AppParams]) -> RunResult:
-    multi = np.asarray(trace.t_issue).ndim == 2
-    cnt = dram.run_channels(trace, cfg) if multi else dram.run_channel(trace, cfg)
-    n_channels = np.asarray(trace.t_issue).shape[0] if multi else 1
+def _result_from_counters(cnt, cfg: MechConfig, apps: Sequence,
+                          n_channels: int) -> RunResult:
+    """Turn one config's raw ``dram.Counters`` into a ``RunResult``."""
     avg_lat, req = _per_core_latency(cnt)
     ipc = _ipc_model(avg_lat, req, apps)
     tot = lambda x: float(np.asarray(x).sum())
     n_req = tot(cnt.reads) + tot(cnt.writes)
     instr = sum(req[c] * 1000.0 / a.mpki for c, a in enumerate(apps))
-    # exec time: slowest core (ns)
+    # exec time: slowest core (ns); 0 when no core issued any request
     times = []
     for c, a in enumerate(apps):
         if req[c] == 0:
@@ -86,14 +92,15 @@ def run_mechanism(trace: dram.Trace, cfg: MechConfig,
         mlp = MLP_INTENSIVE if a.name in traces.INTENSIVE else MLP_NON
         cyc = i * CPI_EXEC + req[c] * (avg_lat[c] * CPU_GHZ) / mlp
         times.append(cyc / CPU_GHZ)
-    exec_ns = max(times)
+    exec_ns = max(times) if times else 0.0
     parts = ENERGY.system_energy_nj(cnt, n_channels, len(apps), instr, exec_ns)
+    div = n_req if n_req else 1.0
     return RunResult(
         mechanism=cfg.mechanism,
         ipc=ipc,
         avg_lat_ns=avg_lat,
-        row_hit_rate=tot(cnt.row_hits) / n_req,
-        cache_hit_rate=tot(cnt.cache_hits) / n_req if cfg.has_cache else 0.0,
+        row_hit_rate=tot(cnt.row_hits) / div,
+        cache_hit_rate=tot(cnt.cache_hits) / div if cfg.has_cache else 0.0,
         exec_time_ns=exec_ns,
         dram_energy_nj=parts["dram_total"],
         system_energy_nj=parts["system_total"],
@@ -102,8 +109,53 @@ def run_mechanism(trace: dram.Trace, cfg: MechConfig,
     )
 
 
+def run_mechanism(trace: dram.Trace, cfg: MechConfig,
+                  apps: Sequence[traces.AppParams]) -> RunResult:
+    multi = np.asarray(trace.t_issue).ndim == 2
+    cnt = dram.run_channels(trace, cfg) if multi else dram.run_channel(trace, cfg)
+    n_channels = np.asarray(trace.t_issue).shape[0] if multi else 1
+    return _result_from_counters(cnt, cfg, apps, n_channels)
+
+
+def sweep(trace: dram.Trace, cfgs: Sequence[MechConfig],
+          apps: Sequence[traces.AppParams],
+          t: DRAMTimings = DDR4) -> List[RunResult]:
+    """Run an arbitrary config grid with one compiled scan per static
+    structure (DESIGN.md §3).
+
+    Configs are grouped by ``cfg.static``; each group's dynamic params are
+    stacked and dispatched as one ``dram.run_sweep`` call, so N configs cost
+    ``len({cfg.static})`` compilations instead of N.  Results come back in
+    input order and are bitwise-identical to per-config ``run_mechanism``.
+    """
+    multi = np.asarray(trace.t_issue).ndim == 2
+    n_channels = np.asarray(trace.t_issue).shape[0] if multi else 1
+    groups: Dict[object, List[int]] = {}
+    for i, cfg in enumerate(cfgs):
+        groups.setdefault(cfg.static, []).append(i)
+    out: List[RunResult | None] = [None] * len(cfgs)
+    for static, idxs in groups.items():
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *[cfgs[i].params(t) for i in idxs])
+        cnts = dram.run_sweep(trace, static, batch)
+        for j, i in enumerate(idxs):
+            cnt = jax.tree.map(lambda a, j=j: a[j], cnts)
+            out[i] = _result_from_counters(cnt, cfgs[i], apps, n_channels)
+    return out
+
+
 def weighted_speedup(res: RunResult, base: RunResult) -> float:
     return float(np.sum(res.ipc / base.ipc))
+
+
+def speedup(res: RunResult, base: RunResult) -> float:
+    """Per-workload average speedup (normalized weighted speedup)."""
+    return weighted_speedup(res, base) / len(base.ipc)
+
+
+def _mech_grid(mechanisms, cfg_overrides) -> List[MechConfig]:
+    return [paper_config(m, **(cfg_overrides or {})) if m != "base"
+            else paper_config(m) for m in mechanisms]
 
 
 @functools.lru_cache(maxsize=None)
@@ -116,12 +168,8 @@ def run_single_core(app_name: str, mechanisms=PAPER_MECHS, n_reqs: int = 24576,
                     seed: int = 1, cfg_overrides: dict | None = None
                     ) -> Dict[str, RunResult]:
     tr, apps = _single_trace(app_name, n_reqs, seed)
-    out = {}
-    for m in mechanisms:
-        cfg = paper_config(m, **(cfg_overrides or {})) if m != "base" \
-            else paper_config(m)
-        out[m] = run_mechanism(tr, cfg, apps)
-    return out
+    res = sweep(tr, _mech_grid(mechanisms, cfg_overrides), apps)
+    return dict(zip(mechanisms, res))
 
 
 def run_eight_core(workload, mechanisms=PAPER_MECHS, per_channel: int = 12288,
@@ -129,12 +177,8 @@ def run_eight_core(workload, mechanisms=PAPER_MECHS, per_channel: int = 12288,
                    ) -> Dict[str, RunResult]:
     name, frac, apps = workload
     tr = traces.build_trace(apps, 4, per_channel, seed)
-    out = {}
-    for m in mechanisms:
-        cfg = paper_config(m, **(cfg_overrides or {})) if m != "base" \
-            else paper_config(m)
-        out[m] = run_mechanism(tr, cfg, apps)
-    return out
+    res = sweep(tr, _mech_grid(mechanisms, cfg_overrides), apps)
+    return dict(zip(mechanisms, res))
 
 
 def speedup_summary(results: Dict[str, RunResult]) -> Dict[str, float]:

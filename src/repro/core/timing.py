@@ -2,10 +2,27 @@
 
 All latencies are stored in integer *ticks* of 1/8 ns so the jitted simulator
 runs on exact int32 arithmetic (float32 timestamps lose precision past ~16 ms).
+
+A ``MechConfig`` (one evaluated system point) splits into two halves
+(DESIGN.md §3):
+
+ * ``StaticConfig`` — mechanism kind, FTS geometry (``n_slots``,
+   ``segs_per_row``) and replacement policy.  These set array *shapes* and
+   trace-time branches, so they are jit static arguments: one compilation
+   per distinct ``StaticConfig``.
+ * ``MechParams`` — every remaining knob (timings in ticks, ``seg_blocks``,
+   ``insert_threshold``, ``benefit_max``) as an int32 pytree that is passed
+   *traced* into the compiled scan, so configs differing only in params
+   share one compilation and can be ``jax.vmap``-ed as a stacked batch
+   (``core/dram.py:run_sweep``).
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
 
 TICKS_PER_NS = 8
 
@@ -87,6 +104,56 @@ MECHANISMS = ("base", "lisa_villa", "figcache_slow", "figcache_fast",
 
 
 @dataclasses.dataclass(frozen=True)
+class StaticConfig:
+    """The shape-/branch-determining half of a ``MechConfig``.
+
+    Hashable and tiny: used as a jit static argument and as the grouping key
+    of ``simulator.sweep``.  Two configs with equal ``StaticConfig`` share one
+    compiled scan.  ``n_slots``/``segs_per_row`` are normalized to 1 for
+    cache-less mechanisms so the FTS arrays collapse to placeholders.
+    """
+    mechanism: str
+    n_slots: int
+    segs_per_row: int
+    policy: str
+
+    @property
+    def has_cache(self) -> bool:
+        return self.mechanism in ("lisa_villa", "figcache_slow",
+                                  "figcache_fast", "figcache_ideal")
+
+    @property
+    def fast_cache(self) -> bool:
+        return self.mechanism in ("lisa_villa", "figcache_fast",
+                                  "figcache_ideal")
+
+    @property
+    def free_reloc(self) -> bool:
+        return self.mechanism == "figcache_ideal"
+
+
+class MechParams(NamedTuple):
+    """Dynamic (traced) half of a ``MechConfig``: int32 scalars, stackable.
+
+    Leaves carry DRAM timings in ticks plus the mechanism knobs that do not
+    change array shapes.  A batch of ``MechParams`` with a leading axis is
+    what ``dram.run_sweep`` vmaps over.
+    """
+    rcd: jax.Array
+    rp: jax.Array
+    cas: jax.Array
+    bl: jax.Array
+    ccd: jax.Array
+    rcd_fast: jax.Array
+    rp_fast: jax.Array
+    reloc: jax.Array
+    lisa_hop: jax.Array
+    seg_blocks: jax.Array
+    insert_threshold: jax.Array
+    benefit_max: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
 class MechConfig:
     """One evaluated system configuration (paper §8)."""
     mechanism: str = "figcache_fast"
@@ -121,6 +188,26 @@ class MechConfig:
     @property
     def free_reloc(self) -> bool:
         return self.mechanism == "figcache_ideal"
+
+    @property
+    def static(self) -> StaticConfig:
+        return StaticConfig(
+            mechanism=self.mechanism,
+            n_slots=self.n_slots if self.has_cache else 1,
+            segs_per_row=self.segs_per_row if self.has_cache else 1,
+            policy=self.policy,
+        )
+
+    def params(self, t: DRAMTimings = DDR4) -> MechParams:
+        i32 = jnp.int32
+        return MechParams(
+            rcd=i32(t.rcd), rp=i32(t.rp), cas=i32(t.cas), bl=i32(t.bl),
+            ccd=i32(t.ccd), rcd_fast=i32(t.rcd_fast), rp_fast=i32(t.rp_fast),
+            reloc=i32(t.reloc), lisa_hop=i32(t.lisa_hop),
+            seg_blocks=i32(self.seg_blocks),
+            insert_threshold=i32(self.insert_threshold),
+            benefit_max=i32((1 << self.benefit_bits) - 1),
+        )
 
 
 def paper_config(mechanism: str, **kw) -> MechConfig:

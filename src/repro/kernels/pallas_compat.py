@@ -1,0 +1,12 @@
+"""Version shims for the Pallas TPU API used by the kernels.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` after
+0.4.x; kernels import the alias from here so the next rename is a one-file
+fix.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams

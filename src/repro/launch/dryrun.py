@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.launch import analysis, steps as steps_lib
+from repro.launch import mesh as mesh_lib
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
 
@@ -50,7 +51,7 @@ def _compile_step(cfg, shape, mesh, plan_overrides):
     plan = steps_lib.make_plan(cfg, shape, mesh, overrides=plan_overrides)
     model = build_model(cfg, plan)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with mesh_lib.set_mesh(mesh):
         if shape.kind == "train":
             hyper = steps_lib.Hyper()
             step, state_sh = steps_lib.make_train_step(model, mesh, hyper)

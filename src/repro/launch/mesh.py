@@ -8,6 +8,16 @@ from __future__ import annotations
 import jax
 
 
+def set_mesh(mesh):
+    """Compat wrapper for ``jax.set_mesh`` (added after 0.4.x).
+
+    On newer JAX it installs the mesh for sharding-in-types; on older
+    releases a ``Mesh`` is itself the equivalent context manager."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -21,6 +21,7 @@ from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.data import DataPipeline
 from repro.launch import sharding as shd
 from repro.launch import steps as steps_lib
+from repro.launch import mesh as mesh_lib
 from repro.launch.mesh import make_test_mesh
 from repro.models import build_model
 from repro.runtime import HeartbeatMonitor, StepRunner
@@ -45,7 +46,7 @@ def run(arch: str, shape_name: str, *, steps: int = 50, reduced: bool = True,
                                overrides={"microbatches": 1, "remat": "full"})
     model = build_model(cfg, plan)
 
-    with jax.set_mesh(mesh):
+    with mesh_lib.set_mesh(mesh):
         step_fn, state_sh = steps_lib.make_train_step(model, mesh, hyper)
         start = 0
         pipe = DataPipeline(cfg, shape, seed=0)
