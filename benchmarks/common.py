@@ -11,33 +11,20 @@ from repro.core import simulator, traces
 QUICK_REQS_1CORE = 10240
 QUICK_REQS_8CORE = 6144
 LONG_REQS_8CORE = 12288   # figs 12/14: enough traffic for eviction pressure
+IS_QUICK = False          # set_quick() ran: figures may rescale knobs so
+                          # shrunken traces still create cache pressure
 
 
 def set_quick() -> None:
     """Shrink every trace for CI smoke runs (``benchmarks/run.py --quick``)."""
-    global QUICK_REQS_1CORE, QUICK_REQS_8CORE, LONG_REQS_8CORE
+    global QUICK_REQS_1CORE, QUICK_REQS_8CORE, LONG_REQS_8CORE, IS_QUICK
+    IS_QUICK = True
     QUICK_REQS_1CORE = 2048
     QUICK_REQS_8CORE = 1024
     LONG_REQS_8CORE = 2048
-    single_core.cache_clear()
-    eight_core.cache_clear()
     eight_trace.cache_clear()
-
-
-@functools.lru_cache(maxsize=None)
-def single_core(app: str, mechs=simulator.PAPER_MECHS, **over):
-    return simulator.run_single_core(app, mechanisms=mechs,
-                                     n_reqs=QUICK_REQS_1CORE,
-                                     cfg_overrides=dict(over) or None)
-
-
-@functools.lru_cache(maxsize=None)
-def eight_core(idx: int, mechs=simulator.PAPER_MECHS, per_channel=None,
-               **over):
-    wl = traces.eight_core_workloads()[idx]
-    return simulator.run_eight_core(
-        wl, mechanisms=mechs, per_channel=per_channel or QUICK_REQS_8CORE,
-        cfg_overrides=dict(over) or None)
+    single_core_batch.cache_clear()
+    eight_core_batch.cache_clear()
 
 
 @functools.lru_cache(maxsize=None)
@@ -46,6 +33,24 @@ def eight_trace(idx: int, per_channel=None, seed: int = 2):
     name, frac, apps = traces.eight_core_workloads()[idx]
     tr = traces.build_trace(apps, 4, per_channel or QUICK_REQS_8CORE, seed)
     return tr, tuple(apps)
+
+
+@functools.lru_cache(maxsize=None)
+def single_core_batch(apps: tuple, mechs=simulator.PAPER_MECHS):
+    """All apps x all mechanisms via stacked traces: one compiled scan per
+    static structure covers the whole fig-7 cross product."""
+    return simulator.run_single_core_batch(list(apps), mechanisms=mechs,
+                                           n_reqs=QUICK_REQS_1CORE)
+
+
+@functools.lru_cache(maxsize=None)
+def eight_core_batch(idxs: tuple, mechs=simulator.PAPER_MECHS,
+                     per_channel=None):
+    """All workloads x all mechanisms via stacked traces (fig 8)."""
+    wls = [traces.eight_core_workloads()[i] for i in idxs]
+    res = simulator.run_eight_core_batch(
+        wls, mechanisms=mechs, per_channel=per_channel or QUICK_REQS_8CORE)
+    return dict(zip(idxs, res))
 
 
 def eight_core_grid(idx: int, cfgs, per_channel=None):
@@ -57,6 +62,9 @@ def eight_core_grid(idx: int, cfgs, per_channel=None):
 
 # two workloads per intensity class for quick benches
 WL_IDX = {25: [0, 2], 50: [5, 7], 75: [10, 12], 100: [15, 17]}
+# flattened, in intensity order: figs 8-11 all key eight_core_batch on this
+# exact tuple so they share ONE cached workloads x mechanisms batch
+ALL_WL = tuple(i for idxs in WL_IDX.values() for i in idxs)
 
 
 def timed(fn):

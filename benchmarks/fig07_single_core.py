@@ -1,4 +1,9 @@
-"""Figure 7: single-core speedups over Base, by memory intensity."""
+"""Figure 7: single-core speedups over Base, by memory intensity.
+
+All six app traces are stacked along the (independent) channel axis and the
+whole apps x mechanisms cross product dispatches as one compiled scan per
+static structure (``simulator.run_single_core_batch``).
+"""
 import numpy as np
 
 from benchmarks import common
@@ -10,8 +15,9 @@ APPS = ["mcf", "libquantum", "lbm", "gcc", "sjeng", "tpch2"]
 def run():
     rows = []
     per_mech = {}
+    batch = common.single_core_batch(tuple(APPS))
     for app in APPS:
-        res = common.single_core(app)
+        res = batch[app]
         s = simulator.speedup_summary(res)
         cls = "intensive" if app in traces.INTENSIVE else "non-intensive"
         for m, v in s.items():

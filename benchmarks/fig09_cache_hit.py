@@ -1,4 +1,8 @@
-"""Figure 9: in-DRAM cache hit rates (LISA-VILLA vs FIGCache-Slow/Fast)."""
+"""Figure 9: in-DRAM cache hit rates (LISA-VILLA vs FIGCache-Slow/Fast).
+
+Shares the stacked-trace batch with figs 8/10/11 (one cached
+``common.eight_core_batch`` run covers all four figures).
+"""
 import numpy as np
 
 from benchmarks import common
@@ -7,9 +11,10 @@ from benchmarks import common
 def run():
     by = {}
     rows = []
+    batch = common.eight_core_batch(common.ALL_WL)
     for frac, idxs in common.WL_IDX.items():
         for i in idxs:
-            res = common.eight_core(i)
+            res = batch[i]
             for m in ("lisa_villa", "figcache_slow", "figcache_fast"):
                 by.setdefault((frac, m), []).append(res[m].cache_hit_rate)
                 rows.append({"intensity": frac, "workload": i, "mechanism": m,

@@ -1,4 +1,7 @@
-"""Figure 10: DRAM row-buffer hit rate (the co-location effect)."""
+"""Figure 10: DRAM row-buffer hit rate (the co-location effect).
+
+Shares the stacked-trace batch with figs 8/9/11 (cached).
+"""
 import numpy as np
 
 from benchmarks import common
@@ -7,9 +10,10 @@ from benchmarks import common
 def run():
     by = {}
     rows = []
+    batch = common.eight_core_batch(common.ALL_WL)
     for frac, idxs in common.WL_IDX.items():
         for i in idxs:
-            res = common.eight_core(i)
+            res = batch[i]
             for m in ("base", "lisa_villa", "figcache_slow", "figcache_fast"):
                 by.setdefault((frac, m), []).append(res[m].row_hit_rate)
                 rows.append({"intensity": frac, "workload": i, "mechanism": m,

@@ -1,4 +1,7 @@
-"""Figure 11: system energy (+ DRAM energy) normalized to Base."""
+"""Figure 11: system energy (+ DRAM energy) normalized to Base.
+
+Shares the stacked-trace batch with figs 8/9/10 (cached).
+"""
 import numpy as np
 
 from benchmarks import common
@@ -7,9 +10,10 @@ from benchmarks import common
 def run():
     by = {}
     rows = []
+    batch = common.eight_core_batch(common.ALL_WL)
     for frac, idxs in common.WL_IDX.items():
         for i in idxs:
-            res = common.eight_core(i)
+            res = batch[i]
             b = res["base"]
             for m in ("figcache_slow", "figcache_fast", "lisa_villa"):
                 r = res[m]

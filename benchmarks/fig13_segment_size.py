@@ -1,9 +1,9 @@
 """Figure 13: row-segment size sweep (8..128 blocks; paper peak at 16).
 
-One ``simulator.sweep`` call per workload covers the whole grid; segment
-size sets ``segs_per_row`` (an FTS array shape), so each point compiles its
-own scan — but compilations are shared across the two workloads and the base
-config appears only once.
+One ``simulator.sweep`` call per workload covers the whole grid.  Segment
+size (``segs_per_row``) is traced under the padded FTS model (DESIGN.md §3),
+so every FIGCache point shares ONE compiled scan — the grid costs 2
+compilations total (base + figcache_fast), reused across both workloads.
 """
 import numpy as np
 

@@ -6,9 +6,24 @@ configs costs N compilations.  "After" is the sweep engine: the same grid
 shares one static structure, so ``dram.run_sweep`` compiles ONE scan and
 vmaps it over the stacked ``MechParams`` batch (DESIGN.md §3).
 
+Three grids are measured and ASSERTED to batch into a single compilation:
+
+ * timings grid — insert_threshold x benefit_bits (pure ``MechParams``
+   knobs since PR 1);
+ * capacity grid — ``cache_rows`` (fig 12's knob), which changes the FTS
+   slot count;
+ * segment grid — ``seg_blocks`` (fig 13's knob), which changes
+   ``segs_per_row``.
+
+The last two only batch because the FTS is shape-polymorphic: arrays are
+padded to ``StaticConfig.max_slots`` and the effective ``n_slots`` /
+``segs_per_row`` ride traced in ``MechParams``.  Each batched run is also
+cross-checked bitwise against per-config *unpadded* runs
+(``dram.run_channel_exact``: FTS allocated at exactly n_slots), so the
+1-compilation behavior is not bought with a semantics change.
+
 Compilations are counted via ``dram.JIT_TRACE_LOG`` (the scan body logs one
-entry per trace).  The two modes are also cross-checked for bitwise-equal
-counters, so the speedup is not bought with a semantics change.
+entry per trace).
 """
 from __future__ import annotations
 
@@ -25,6 +40,38 @@ from repro.core.timing import paper_config
 # 8 configs, one static structure: threshold x benefit_bits grid
 GRID = [dict(insert_threshold=th, benefit_bits=bb)
         for th in (1, 2, 4, 8) for bb in (4, 5)]
+# fig 12 / fig 13 knobs — distinct grid sizes so each traces separately
+CAPACITY_GRID = [dict(cache_rows=cr) for cr in (2, 4, 8, 16, 32, 64)]
+SEGMENT_GRID = [dict(seg_blocks=sb) for sb in (8, 16, 32, 64, 128)]
+
+
+def _stack_params(cfgs):
+    return jax.tree.map(lambda *xs: jnp.stack(xs),
+                        *[c.params() for c in cfgs])
+
+
+def _assert_counters_equal(ref, got, ctx):
+    for name, x, y in zip(ref._fields, ref, got):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), \
+            f"sweep engine diverged from per-config run: {ctx} field {name}"
+
+
+def _shape_grid_jits(tr, grid_kw, label):
+    """Batch one shape-changing grid; return its jit count after asserting
+    bitwise equality with per-config unpadded runs."""
+    cfgs = [paper_config("figcache_fast", **kw) for kw in grid_kw]
+    static = cfgs[0].static
+    assert all(c.static == static for c in cfgs), \
+        f"{label} grid must share one padded static structure"
+    j0 = dram.jit_trace_count()
+    after = jax.block_until_ready(
+        dram.run_sweep(tr, static, _stack_params(cfgs)))
+    jits = dram.jit_trace_count() - j0
+    for i, cfg in enumerate(cfgs):
+        ref = dram.run_channel_exact(tr, cfg)
+        got = jax.tree.map(lambda a, i=i: a[i], after)
+        _assert_counters_equal(ref, got, f"{label}[{i}]")
+    return jits
 
 
 def run():
@@ -47,8 +94,7 @@ def run():
     jits_before = dram.jit_trace_count() - j0
 
     # ---- after: one compiled scan, vmapped over the params batch ----------
-    batch = jax.tree.map(lambda *xs: jnp.stack(xs),
-                         *[c.params() for c in cfgs])
+    batch = _stack_params(cfgs)
     j1 = dram.jit_trace_count()
     t0 = time.time()
     after = jax.block_until_ready(dram.run_sweep(tr, static, batch))
@@ -57,15 +103,27 @@ def run():
 
     # same physics in both modes, bit for bit
     for i, cnt in enumerate(before):
-        for a, b in zip(cnt, jax.tree.map(lambda x, i=i: x[i], after)):
-            assert np.array_equal(np.asarray(a), np.asarray(b)), \
-                f"sweep engine diverged from per-config run at config {i}"
+        _assert_counters_equal(cnt, jax.tree.map(lambda x, i=i: x[i], after),
+                               f"timings[{i}]")
+
+    # ---- shape-changing grids: capacity (fig 12), segment size (fig 13) ---
+    jits_capacity = _shape_grid_jits(tr, CAPACITY_GRID, "capacity")
+    jits_segment = _shape_grid_jits(tr, SEGMENT_GRID, "segment")
+    # the acceptance bar for the padded-FTS model: at most ONE compiled
+    # scan per shape-changing grid — never one per shape point.  0 means an
+    # earlier dispatch with matching (static, trace, batch) shapes was
+    # reused (e.g. fig12's grid in a full run.py sweep), which is the same
+    # property in an even stronger form.
+    assert jits_capacity <= 1, f"capacity grid took {jits_capacity} jits"
+    assert jits_segment <= 1, f"segment grid took {jits_segment} jits"
 
     n = len(cfgs)
     summary = {
         "n_configs": n,
         "jits_before": jits_before,
         "jits_after": jits_after,
+        "jits_capacity": jits_capacity,
+        "jits_segment": jits_segment,
         "us_per_config_before": round(t_before / n * 1e6),
         "us_per_config_after": round(t_after / n * 1e6),
         "wall_speedup": round(t_before / max(t_after, 1e-9), 2),

@@ -4,7 +4,11 @@ The JAX analogue of the paper's Ramulator setup (§7): a ``jax.lax.scan`` over a
 per-channel memory-request trace, ``jax.vmap``-ed over channels.  Per-bank
 state = open row + busy-until timestamp + an FTS (``core/fts.py``).  Six
 mechanisms (``core/timing.MechConfig``): base, lisa_villa, figcache_slow,
-figcache_fast, figcache_ideal, lldram.
+figcache_fast, figcache_ideal, lldram.  The relocation timing model (RELOC
+column transfers through the global row buffer, overlapped destination ACTs,
+distance independence) follows the paper's §5 FIGARO substrate; the caching
+decisions layered on top (lookup/insert/evict) are §6 FIGCache, implemented
+by ``core/fts.py``.
 
 Modeling abstractions (documented in DESIGN.md §7):
  * per-bank in-order service with bank-level parallelism (a request waits only
@@ -16,9 +20,12 @@ Modeling abstractions (documented in DESIGN.md §7):
 Timestamps are int32 ticks (1/8 ns).  Latency accumulators are int32 ns.
 
 Sweep engine (DESIGN.md §3): the scan body is built from the *static* half of
-a config only (``timing.StaticConfig`` — shapes and trace-time branches); all
-remaining knobs arrive as a traced ``timing.MechParams`` pytree.  One
-compilation therefore serves every config sharing a static structure, and
+a config only (``timing.StaticConfig`` — the mechanism/policy branches plus
+the padded FTS allocation ``max_slots``/``max_segs_per_row``); every numeric
+knob, *including the effective FTS geometry* ``n_slots``/``segs_per_row``,
+arrives as a traced ``timing.MechParams`` pytree and the FTS masks itself to
+the live slot prefix.  One compilation therefore serves every config sharing
+a static structure — capacity and segment-size grids included — and
 ``run_sweep`` vmaps the very same scan over a stacked params batch so a whole
 config grid executes as one XLA program — the harness-side analogue of the
 relocation-granularity waste FIGARO removes in hardware.
@@ -91,11 +98,12 @@ class Counters(NamedTuple):
 
 
 def init_state(static: StaticConfig, geom: DRAMGeometry = GEOM) -> BankState:
-    """Initial per-bank state.  Accepts a ``StaticConfig`` (or any object
-    with ``has_cache``/``n_slots``/``segs_per_row``, e.g. a ``MechConfig``)."""
-    n_slots = static.n_slots if static.has_cache else 1
-    spr = static.segs_per_row if static.has_cache else 1
-    one = fts_lib.init(n_slots, spr)
+    """Initial per-bank state.  FTS arrays are allocated at the *padded*
+    maximum; the effective geometry is applied per step from the traced
+    ``MechParams`` (slots beyond ``n_slots`` stay invalid forever)."""
+    max_slots = static.max_slots if static.has_cache else 1
+    max_segs = static.max_segs_per_row if static.has_cache else 1
+    one = fts_lib.init(max_slots, max_segs)
     fts = jax.tree.map(
         lambda a: jnp.broadcast_to(a, (geom.n_banks,) + a.shape).copy(), one)
     return BankState(
@@ -127,12 +135,13 @@ def _lisa_hops(row: jax.Array, geom: DRAMGeometry) -> jax.Array:
 def make_step(static: StaticConfig, geom: DRAMGeometry = GEOM):
     """Build the scan body for one *static structure*.
 
-    The returned ``step(params, carry, req)`` closes over shapes and
-    trace-time branches only; every numeric knob comes in through the traced
-    ``params`` (``timing.MechParams``), so one compilation of the scan serves
-    arbitrarily many configs sharing ``static`` (DESIGN.md §3).
+    The returned ``step(params, carry, req)`` closes over the padded FTS
+    allocation and trace-time branches only; every numeric knob — the DRAM
+    timings AND the effective FTS geometry ``n_slots``/``segs_per_row`` —
+    comes in through the traced ``params`` (``timing.MechParams``), so one
+    compilation of the scan serves arbitrarily many configs sharing
+    ``static``, capacity and segment-size sweeps included (DESIGN.md §3).
     """
-    spr = static.segs_per_row if static.has_cache else 1
     cache_base = jnp.int32(geom.n_rows)           # id-space for cache rows
     reserved_sub = geom.n_subarrays - 1           # figcache_slow region
     lisa = static.mechanism == "lisa_villa"
@@ -142,6 +151,7 @@ def make_step(static: StaticConfig, geom: DRAMGeometry = GEOM):
     def step(params: MechParams, carry, req):
         state, cnt = carry
         p = params
+        spr = p.segs_per_row            # traced — rides in MechParams
         bank = req.bank
         fts_b = jax.tree.map(lambda a: a[bank], state.fts)
         # closed loop: a core may not have more than N_MSHR requests in
@@ -193,7 +203,8 @@ def make_step(static: StaticConfig, geom: DRAMGeometry = GEOM):
                 lambda m, b: jnp.where(cacheable, m, b), fts_miss, fts_b)
             do_ins = ~hit & cacheable & want
             ins = fts_lib.insert(fts_miss, seg, req.is_write, step_id,
-                                 policy=static.policy, segs_per_row=spr)
+                                 policy=static.policy, segs_per_row=spr,
+                                 n_slots=p.n_slots)
             if static.free_reloc:
                 reloc_cost = jnp.int32(0)
             elif lisa:
@@ -324,3 +335,13 @@ def run_channels(traces: Trace, cfg: MechConfig,
                  t: DRAMTimings = DDR4) -> Counters:
     """Simulate C independent channels: traces leaves shaped (C, T)."""
     return _simulate_jit(traces, cfg.static, cfg.params(t))
+
+
+def run_channel_exact(trace: Trace, cfg: MechConfig,
+                      t: DRAMTimings = DDR4) -> Counters:
+    """Unpadded reference run: FTS allocated at exactly ``cfg.n_slots``
+    (``max == actual``, no masking headroom).  Benchmarks and tests use this
+    as the bitwise-equivalence bar for the padded/masked path; it costs one
+    compilation per distinct FTS shape, which is precisely what the padded
+    path avoids.  Handles (T,) and (C, T) traces alike."""
+    return _simulate_jit(trace, cfg.exact_static, cfg.params(t))

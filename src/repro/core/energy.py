@@ -12,6 +12,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 
 @dataclasses.dataclass(frozen=True)
 class EnergyModel:
@@ -59,6 +61,29 @@ class EnergyModel:
         off = reqs * self.e_offchip_req
         return {**d, "cpu": cpu, "offchip": off,
                 "system_total": d["dram_total"] + cpu + off}
+
+    def system_energy_nj_batch(self, counters, n_channels: int, n_cores: int,
+                               instructions, exec_time_ns, tot) -> dict:
+        """Vectorized over a leading params axis P (sweep post-processing).
+
+        ``counters`` leaves are shaped (P, ...); ``instructions`` and
+        ``exec_time_ns`` are (P,) float64; ``tot`` reduces a counter leaf to
+        (P,) totals.  Mirrors the scalar formulas term for term, returning a
+        dict of (P,) arrays."""
+        c = counters
+        dyn = (tot(c.acts_slow) * self.e_act_pre
+               + tot(c.acts_fast) * self.e_act_pre_fast
+               + tot(c.insertions) * self.e_act_pre_fast  # RELOC dst ACT
+               + tot(c.reads) * self.e_rd
+               + tot(c.writes) * self.e_wr
+               + (tot(c.reloc_blocks) + tot(c.wb_blocks)) * self.e_reloc_block)
+        bg = np.asarray(exec_time_ns, np.float64) * self.p_bg * n_channels
+        cpu = np.asarray(instructions, np.float64) * self.e_cpu_instr \
+            + np.asarray(exec_time_ns, np.float64) * self.p_cpu_static * n_cores
+        off = (tot(c.reads) + tot(c.writes)) * self.e_offchip_req
+        return {"dram_dynamic": dyn, "dram_background": bg,
+                "dram_total": dyn + bg, "cpu": cpu, "offchip": off,
+                "system_total": dyn + bg + cpu + off}
 
 
 ENERGY = EnergyModel()

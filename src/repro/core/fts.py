@@ -1,4 +1,7 @@
-"""FIGCache Tag Store (FTS) — paper §5.1, as a pure-JAX state machine.
+"""FIGCache Tag Store (FTS) — the paper's §6 FIGCache policy engine (tag
+lookup, insert-any-miss, benefit-based replacement) as a pure-JAX state
+machine, layered on the §5 FIGARO relocation substrate modeled in
+``core/dram.py``.
 
 The exact same structure drives (a) the cycle-approximate DRAM simulator
 (`core/dram.py`) and (b) the TPU-side FIGCache-KV segment cache
@@ -8,6 +11,24 @@ associative within a bank, *insert-any-miss* insertion, and the paper's
 the lowest summed benefit, mark all its segments in a bitvector, then refill
 marked slots lowest-benefit-first).  SegmentBenefit / LRU / Random
 alternatives implement Figure 14's comparison points.
+
+Shape polymorphism (DESIGN.md §3): arrays are allocated at a **padded
+maximum** (``max_slots`` slots, ``max_segs_per_row``-wide eviction
+bitvector) and the *effective* geometry — ``n_slots`` active slots arranged
+as rows of ``segs_per_row`` segments — arrives as **traced** int32 scalars.
+The invariant that makes this exact:
+
+    slots with index >= n_slots are PADDING: their tags stay -1, their
+    valid bits stay False, and no code path may select them as a free slot
+    or a victim.
+
+``lookup`` therefore needs no explicit mask (padding can never match a
+tag); ``insert`` and both benefit-based victim pickers mask their argmin
+reductions to the active prefix.  With ``n_slots == max_slots`` and
+``segs_per_row == max_segs_per_row`` every operation is bitwise-identical
+to an unpadded tag store (regression: ``tests/test_padded_fts.py``), which
+is what lets one compiled scan serve an entire capacity or segment-size
+sweep (``core/dram.py:run_sweep``).
 
 All ops are branchless (arithmetic select) so they jit/scan/vmap cleanly.
 """
@@ -22,42 +43,61 @@ BIG = jnp.int32(1 << 30)
 
 
 class FTS(NamedTuple):
-    tags: jax.Array      # (n_slots,) int32 — segment id, valid bit separate
-    valid: jax.Array     # (n_slots,) bool
-    dirty: jax.Array     # (n_slots,) bool
-    benefit: jax.Array   # (n_slots,) int32 — saturating counter
-    last_use: jax.Array  # (n_slots,) int32 — step stamp (LRU policy)
+    tags: jax.Array      # (max_slots,) int32 — segment id, valid bit separate
+    valid: jax.Array     # (max_slots,) bool
+    dirty: jax.Array     # (max_slots,) bool
+    benefit: jax.Array   # (max_slots,) int32 — saturating counter
+    last_use: jax.Array  # (max_slots,) int32 — step stamp (LRU policy)
     evict_row: jax.Array   # () int32 — row marked for eviction (-1: none)
-    evict_mask: jax.Array  # (segs_per_row,) bool — paper's bitvector
+    evict_mask: jax.Array  # (max_segs_per_row,) bool — paper's bitvector
     miss_tags: jax.Array   # (n_track,) int32 — insertion-threshold tracking
     miss_cnt: jax.Array    # (n_track,) int32
 
 
-def init(n_slots: int, segs_per_row: int, n_track: int = 256) -> FTS:
+def init(max_slots: int, max_segs_per_row: int, n_track: int = 256) -> FTS:
+    """Allocate a tag store at its padded maximum geometry.
+
+    Callers that do not sweep shapes (e.g. ``figkv/``) simply pass their
+    exact geometry here and omit ``n_slots`` everywhere else — padding with
+    ``max == actual`` is the unpadded tag store.
+    """
     return FTS(
-        tags=jnp.full((n_slots,), -1, jnp.int32),
-        valid=jnp.zeros((n_slots,), bool),
-        dirty=jnp.zeros((n_slots,), bool),
-        benefit=jnp.zeros((n_slots,), jnp.int32),
-        last_use=jnp.zeros((n_slots,), jnp.int32),
+        tags=jnp.full((max_slots,), -1, jnp.int32),
+        valid=jnp.zeros((max_slots,), bool),
+        dirty=jnp.zeros((max_slots,), bool),
+        benefit=jnp.zeros((max_slots,), jnp.int32),
+        last_use=jnp.zeros((max_slots,), jnp.int32),
         evict_row=jnp.int32(-1),
-        evict_mask=jnp.zeros((segs_per_row,), bool),
+        evict_mask=jnp.zeros((max_segs_per_row,), bool),
         miss_tags=jnp.full((n_track,), -1, jnp.int32),
         miss_cnt=jnp.zeros((n_track,), jnp.int32),
     )
 
 
+def _active(fts: FTS, n_slots) -> jax.Array:
+    """(max_slots,) bool — True for the live (non-padding) slot prefix."""
+    idx = jnp.arange(fts.tags.shape[0], dtype=jnp.int32)
+    return idx < jnp.asarray(n_slots, jnp.int32)
+
+
 def lookup(fts: FTS, seg: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """-> (hit: bool, slot: int32). slot undefined when !hit."""
+    """-> (hit: bool, slot: int32). slot undefined when !hit.
+
+    No padding mask needed: padded slots keep ``tags == -1, valid == False``
+    for the lifetime of the store (the module invariant), so they can never
+    match a segment id.
+    """
     m = (fts.tags == seg) & fts.valid
     return jnp.any(m), jnp.argmax(m).astype(jnp.int32)
 
 
 def touch(fts: FTS, slot: jax.Array, is_write: jax.Array, step: jax.Array,
           benefit_max) -> FTS:
-    """Cache hit: increment saturating benefit, set dirty on writes (§5.1).
+    """Cache hit: increment saturating benefit, set dirty on writes (§6).
 
-    ``benefit_max`` may be a Python int or a traced int32 (sweep engine)."""
+    ``benefit_max`` may be a Python int or a traced int32 (sweep engine).
+    ``slot`` must come from a successful ``lookup`` and is therefore always
+    an active (non-padding) slot."""
     b = jnp.minimum(fts.benefit[slot] + 1, benefit_max)
     return fts._replace(
         benefit=fts.benefit.at[slot].set(b),
@@ -67,7 +107,8 @@ def touch(fts: FTS, slot: jax.Array, is_write: jax.Array, step: jax.Array,
 
 
 def should_insert(fts: FTS, seg: jax.Array, threshold) -> Tuple[jax.Array, FTS]:
-    """Insertion policy (§9.4).  threshold=1 == insert-any-miss (default).
+    """Insertion policy (paper §9.4 sensitivity).  threshold=1 ==
+    insert-any-miss (the §6 default).
 
     Higher thresholds track consecutive misses per segment in a small
     direct-mapped counter table (the 'additional metadata' §9.4 mentions).
@@ -88,32 +129,60 @@ def should_insert(fts: FTS, seg: jax.Array, threshold) -> Tuple[jax.Array, FTS]:
     return (thr <= 1) | (cnt >= thr), fts
 
 
-def _pick_victim_row_benefit(fts: FTS, segs_per_row: int):
-    """Paper §5.1 RowBenefit: row-granularity eviction with a bitvector."""
-    n_rows = fts.benefit.shape[0] // segs_per_row
+def _pick_victim_row_benefit(fts: FTS, segs_per_row, n_slots):
+    """Paper §6 RowBenefit: row-granularity eviction with a bitvector.
+
+    Reduces over a masked (max_rows, max_segs_per_row) view of the padded
+    flat arrays: row r covers slots [r*segs_per_row, (r+1)*segs_per_row)
+    and only slots < n_slots participate.  ``segs_per_row`` is traced, so
+    the view cannot be a literal reshape — row sums are a segment-sum over
+    the flat axis and the in-row argmin is a masked argmin over all
+    max_slots entries.  With n_slots == max_slots this reproduces the
+    unpadded reshape(n_rows, segs_per_row) reduction bit for bit.
+
+    Precondition: ``n_slots`` must be a multiple of ``segs_per_row`` (cache
+    rows are whole rows; ``MechConfig`` guarantees it via
+    ``n_slots = cache_rows * segs_per_row``).  A ragged last row would let
+    the persistent bitvector point at padding and silently evict slot 0 —
+    the unpadded reshape would have raised on such a geometry instead.
+    """
+    max_slots = fts.benefit.shape[0]
+    max_segs = fts.evict_mask.shape[0]
+    spr = jnp.asarray(segs_per_row, jnp.int32)
+    idx = jnp.arange(max_slots, dtype=jnp.int32)
+    active = _active(fts, n_slots)
+    row_of = idx // spr
+    seg_of = idx - row_of * spr
     need_new = (fts.evict_row < 0) | ~jnp.any(fts.evict_mask)
-    row_sum = fts.benefit.reshape(n_rows, segs_per_row).sum(axis=1)
-    new_row = jnp.argmin(row_sum).astype(jnp.int32)
+    # masked row-sum / row-liveness of the (max_rows, max_segs) view;
+    # max_rows == max_slots covers segs_per_row == 1
+    row_sum = jnp.zeros((max_slots,), jnp.int32).at[row_of].add(
+        jnp.where(active, fts.benefit, 0))
+    row_live = jnp.zeros((max_slots,), bool).at[row_of].max(active)
+    new_row = jnp.argmin(jnp.where(row_live, row_sum, BIG)).astype(jnp.int32)
     row = jnp.where(need_new, new_row, fts.evict_row)
-    mask = jnp.where(need_new, jnp.ones_like(fts.evict_mask), fts.evict_mask)
-    row_benefit = jax.lax.dynamic_slice(
-        fts.benefit, (row * segs_per_row,), (segs_per_row,))
-    idx = jnp.argmin(jnp.where(mask, row_benefit, BIG)).astype(jnp.int32)
-    slot = row * segs_per_row + idx
-    mask = mask.at[idx].set(False)
+    fresh = jnp.arange(max_segs, dtype=jnp.int32) < spr
+    mask = jnp.where(need_new, fresh, fts.evict_mask)
+    in_row = active & (row_of == row) & mask[seg_of]
+    slot = jnp.argmin(jnp.where(in_row, fts.benefit, BIG)).astype(jnp.int32)
+    mask = mask.at[jnp.remainder(slot, spr)].set(False)
     return slot, fts._replace(evict_row=row, evict_mask=mask)
 
 
-def _pick_victim(fts: FTS, policy: str, segs_per_row: int, step: jax.Array):
+def _pick_victim(fts: FTS, policy: str, segs_per_row, n_slots,
+                 step: jax.Array):
     if policy == "row_benefit":
-        return _pick_victim_row_benefit(fts, segs_per_row)
+        return _pick_victim_row_benefit(fts, segs_per_row, n_slots)
+    active = _active(fts, n_slots)
     if policy == "segment_benefit":
-        return jnp.argmin(fts.benefit).astype(jnp.int32), fts
+        masked = jnp.where(active, fts.benefit, BIG)
+        return jnp.argmin(masked).astype(jnp.int32), fts
     if policy == "lru":
-        return jnp.argmin(fts.last_use).astype(jnp.int32), fts
+        masked = jnp.where(active, fts.last_use, BIG)
+        return jnp.argmin(masked).astype(jnp.int32), fts
     if policy == "random":
-        n = fts.tags.shape[0]
         h = (step * jnp.int32(1103515245) + 12345) & jnp.int32(0x7FFFFFFF)
+        n = jnp.asarray(n_slots, jnp.int32)
         return jnp.remainder(h, n).astype(jnp.int32), fts
     raise ValueError(f"unknown replacement policy {policy!r}")
 
@@ -127,11 +196,23 @@ class InsertResult(NamedTuple):
 
 
 def insert(fts: FTS, seg: jax.Array, is_write: jax.Array, step: jax.Array,
-           *, policy: str, segs_per_row: int, benefit_init: int = 1) -> InsertResult:
-    """Insert `seg` (on a miss): free slot if any, else policy victim."""
-    has_free = ~jnp.all(fts.valid)
-    free_slot = jnp.argmin(fts.valid).astype(jnp.int32)
-    victim_slot, fts_v = _pick_victim(fts, policy, segs_per_row, step)
+           *, policy: str, segs_per_row, n_slots=None,
+           benefit_init: int = 1) -> InsertResult:
+    """Insert `seg` (on a miss): free slot if any, else policy victim.
+
+    ``segs_per_row`` and ``n_slots`` may be Python ints or traced int32
+    scalars; ``n_slots=None`` means "all slots active" (unpadded store).
+    ``n_slots`` must be a multiple of ``segs_per_row`` under the
+    row_benefit policy (see ``_pick_victim_row_benefit``).  Free-slot
+    search and victim selection are both masked to the active prefix,
+    preserving the padding invariant (padded slots never turn valid)."""
+    if n_slots is None:
+        n_slots = fts.tags.shape[0]
+    active = _active(fts, n_slots)
+    has_free = jnp.any(active & ~fts.valid)
+    # padding reads as "occupied" so argmin lands on an active free slot
+    free_slot = jnp.argmin(jnp.where(active, fts.valid, True)).astype(jnp.int32)
+    victim_slot, fts_v = _pick_victim(fts, policy, segs_per_row, n_slots, step)
     # when a free slot exists, do not consume the eviction bitvector
     fts = jax.tree.map(lambda a, b: jnp.where(has_free, a, b), fts, fts_v)
     slot = jnp.where(has_free, free_slot, victim_slot)

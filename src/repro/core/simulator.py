@@ -12,10 +12,18 @@ weighted speedup (paper §7, [133]).  Every mechanism sees the *same* trace, so
 speedups isolate the memory system exactly as in the paper.
 
 Sweeps (DESIGN.md §3): ``sweep`` takes an arbitrary list of ``MechConfig``
-points, groups them by their ``StaticConfig`` (the shape-determining half),
-and dispatches each group as ONE ``dram.run_sweep`` call — a single compiled
-scan vmapped over the stacked dynamic params.  ``run_single_core`` /
-``run_eight_core`` are thin wrappers that sweep one config per mechanism.
+points, groups them by their ``StaticConfig`` (mechanism/policy + padded FTS
+allocation — capacity and segment-size no longer split groups), and
+dispatches each group as ONE ``dram.run_sweep`` call — a single compiled
+scan vmapped over the stacked dynamic params.  ``sweep_traces`` additionally
+stacks W equal-shape traces along the (independent) channel axis so a whole
+workloads x configs cross product runs per static structure as one program.
+Post-processing is vectorized over the params axis
+(``_results_from_counters_batch``) so very large grids do not pay a
+Python-side loop for the IPC/energy model.  ``run_single_core`` /
+``run_eight_core`` are thin wrappers that sweep one config per mechanism;
+``run_single_core_batch`` / ``run_eight_core_batch`` are their stacked-trace
+counterparts (figs 7/8).
 """
 from __future__ import annotations
 
@@ -62,51 +70,63 @@ def _per_core_latency(cnt) -> Tuple[np.ndarray, np.ndarray]:
     return np.where(req > 0, lat / np.maximum(req, 1), 0.0), req
 
 
-def _ipc_model(avg_lat_ns, req, apps) -> np.ndarray:
-    ipcs = []
-    for c, a in enumerate(apps):
-        if req[c] == 0:
-            ipcs.append(1.0 / CPI_EXEC)
-            continue
-        instr = req[c] * 1000.0 / a.mpki
-        mlp = MLP_INTENSIVE if a.name in traces.INTENSIVE else MLP_NON
-        cycles = instr * CPI_EXEC + req[c] * (avg_lat_ns[c] * CPU_GHZ) / mlp
-        ipcs.append(instr / cycles)
-    return np.array(ipcs)
+def _results_from_counters_batch(cnts, cfgs: Sequence[MechConfig],
+                                 apps: Sequence, n_channels: int
+                                 ) -> List[RunResult]:
+    """Turn a stacked batch of ``dram.Counters`` into ``RunResult``s.
+
+    Counter leaves carry a leading params axis ``(P, ...)`` (P == len(cfgs));
+    the MLP-weighted IPC model, execution time and the energy model all
+    evaluate vectorized over that axis, so post-processing a large grid is a
+    handful of numpy array ops instead of a Python loop (ROADMAP item).
+    """
+    P = len(cfgs)
+    lat = np.asarray(cnts.lat_sum_ns, dtype=np.float64)  # (P, [C,] cores)
+    req = np.asarray(cnts.req_cnt, dtype=np.float64)
+    if lat.ndim == 3:                # multi-channel: sum over channels
+        lat, req = lat.sum(1), req.sum(1)
+    avg_lat = np.where(req > 0, lat / np.maximum(req, 1), 0.0)
+    n_apps = len(apps)
+    mpki = np.array([a.mpki for a in apps], dtype=np.float64)
+    mlp = np.array([MLP_INTENSIVE if a.name in traces.INTENSIVE else MLP_NON
+                    for a in apps], dtype=np.float64)
+    r, al = req[:, :n_apps], avg_lat[:, :n_apps]          # (P, n_apps)
+    instr = r * 1000.0 / mpki
+    cycles = instr * CPI_EXEC + r * (al * CPU_GHZ) / mlp
+    with np.errstate(divide="ignore", invalid="ignore"):
+        ipc = np.where(r > 0, instr / cycles, 1.0 / CPI_EXEC)
+    # exec time: slowest core (ns); 0 when no core issued any request
+    exec_ns = np.where(r > 0, cycles / CPU_GHZ, 0.0).max(axis=1)
+    instr_tot = instr.sum(axis=1)
+    tot = lambda x: np.asarray(x, dtype=np.float64).reshape(P, -1).sum(axis=1)
+    n_req = tot(cnts.reads) + tot(cnts.writes)
+    parts = ENERGY.system_energy_nj_batch(cnts, n_channels, n_apps,
+                                          instr_tot, exec_ns, tot)
+    row_hits, cache_hits = tot(cnts.row_hits), tot(cnts.cache_hits)
+    out = []
+    for i, cfg in enumerate(cfgs):
+        div = n_req[i] if n_req[i] else 1.0
+        out.append(RunResult(
+            mechanism=cfg.mechanism,
+            ipc=ipc[i],
+            avg_lat_ns=avg_lat[i],
+            row_hit_rate=row_hits[i] / div,
+            cache_hit_rate=cache_hits[i] / div if cfg.has_cache else 0.0,
+            exec_time_ns=float(exec_ns[i]),
+            dram_energy_nj=float(parts["dram_total"][i]),
+            system_energy_nj=float(parts["system_total"][i]),
+            energy_parts={k: float(v[i]) for k, v in parts.items()},
+            counters=jax.tree.map(lambda a, i=i: a[i], cnts),
+        ))
+    return out
 
 
 def _result_from_counters(cnt, cfg: MechConfig, apps: Sequence,
                           n_channels: int) -> RunResult:
-    """Turn one config's raw ``dram.Counters`` into a ``RunResult``."""
-    avg_lat, req = _per_core_latency(cnt)
-    ipc = _ipc_model(avg_lat, req, apps)
-    tot = lambda x: float(np.asarray(x).sum())
-    n_req = tot(cnt.reads) + tot(cnt.writes)
-    instr = sum(req[c] * 1000.0 / a.mpki for c, a in enumerate(apps))
-    # exec time: slowest core (ns); 0 when no core issued any request
-    times = []
-    for c, a in enumerate(apps):
-        if req[c] == 0:
-            continue
-        i = req[c] * 1000.0 / a.mpki
-        mlp = MLP_INTENSIVE if a.name in traces.INTENSIVE else MLP_NON
-        cyc = i * CPI_EXEC + req[c] * (avg_lat[c] * CPU_GHZ) / mlp
-        times.append(cyc / CPU_GHZ)
-    exec_ns = max(times) if times else 0.0
-    parts = ENERGY.system_energy_nj(cnt, n_channels, len(apps), instr, exec_ns)
-    div = n_req if n_req else 1.0
-    return RunResult(
-        mechanism=cfg.mechanism,
-        ipc=ipc,
-        avg_lat_ns=avg_lat,
-        row_hit_rate=tot(cnt.row_hits) / div,
-        cache_hit_rate=tot(cnt.cache_hits) / div if cfg.has_cache else 0.0,
-        exec_time_ns=exec_ns,
-        dram_energy_nj=parts["dram_total"],
-        system_energy_nj=parts["system_total"],
-        energy_parts=parts,
-        counters=cnt,
-    )
+    """One config's ``Counters`` -> ``RunResult`` (P=1 batch, so the scalar
+    and swept paths share one arithmetic and agree to the last float)."""
+    one = jax.tree.map(lambda a: jnp.asarray(a)[None], cnt)
+    return _results_from_counters_batch(one, [cfg], apps, n_channels)[0]
 
 
 def run_mechanism(trace: dram.Trace, cfg: MechConfig,
@@ -138,9 +158,57 @@ def sweep(trace: dram.Trace, cfgs: Sequence[MechConfig],
         batch = jax.tree.map(lambda *xs: jnp.stack(xs),
                              *[cfgs[i].params(t) for i in idxs])
         cnts = dram.run_sweep(trace, static, batch)
+        results = _results_from_counters_batch(
+            cnts, [cfgs[i] for i in idxs], apps, n_channels)
         for j, i in enumerate(idxs):
-            cnt = jax.tree.map(lambda a, j=j: a[j], cnts)
-            out[i] = _result_from_counters(cnt, cfgs[i], apps, n_channels)
+            out[i] = results[j]
+    return out
+
+
+def sweep_traces(trs: Sequence[dram.Trace], cfgs: Sequence[MechConfig],
+                 apps_list: Sequence[Sequence[traces.AppParams]],
+                 t: DRAMTimings = DDR4) -> List[List[RunResult]]:
+    """Cross-workload batching: W equal-shape traces x N configs in one
+    compiled scan per static structure (ROADMAP: collapse figs 7/8).
+
+    Channels are fully independent in the model (each gets its own scan
+    carry), so W workloads stack along the channel axis: (T,) traces stack
+    to (W, T), (C, T) traces concatenate to (W*C, T), and the existing
+    ``dram.run_sweep`` channel vmap does the rest.  Returns
+    ``results[w][i]`` for workload ``trs[w]`` under config ``cfgs[i]``,
+    bitwise-equal to per-workload ``sweep`` calls.
+    """
+    assert len(trs) == len(apps_list) and trs, "one apps tuple per trace"
+    shapes = {np.asarray(tr.t_issue).shape for tr in trs}
+    assert len(shapes) == 1, f"traces must share one shape, got {shapes}"
+    multi = np.asarray(trs[0].t_issue).ndim == 2
+    n_channels = np.asarray(trs[0].t_issue).shape[0] if multi else 1
+    W = len(trs)
+    if multi:
+        flat = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *trs)
+    else:
+        flat = jax.tree.map(lambda *xs: jnp.stack(xs), *trs)
+    groups: Dict[object, List[int]] = {}
+    for i, cfg in enumerate(cfgs):
+        groups.setdefault(cfg.static, []).append(i)
+    out: List[List[RunResult | None]] = [[None] * len(cfgs) for _ in range(W)]
+    for static, idxs in groups.items():
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *[cfgs[i].params(t) for i in idxs])
+        cnts = dram.run_sweep(flat, static, batch)   # leaves (P, W*C, ...)
+        C = n_channels
+        for w in range(W):
+            # slice workload w back out; single-channel inputs also drop the
+            # stacking axis so results are shaped exactly like plain `sweep`
+            if multi:
+                cnt_w = jax.tree.map(
+                    lambda a, w=w: a[:, w * C:(w + 1) * C], cnts)
+            else:
+                cnt_w = jax.tree.map(lambda a, w=w: a[:, w], cnts)
+            results = _results_from_counters_batch(
+                cnt_w, [cfgs[i] for i in idxs], apps_list[w], C)
+            for j, i in enumerate(idxs):
+                out[w][i] = results[j]
     return out
 
 
@@ -179,6 +247,33 @@ def run_eight_core(workload, mechanisms=PAPER_MECHS, per_channel: int = 12288,
     tr = traces.build_trace(apps, 4, per_channel, seed)
     res = sweep(tr, _mech_grid(mechanisms, cfg_overrides), apps)
     return dict(zip(mechanisms, res))
+
+
+def run_single_core_batch(app_names: Sequence[str], mechanisms=PAPER_MECHS,
+                          n_reqs: int = 24576, seed: int = 1,
+                          cfg_overrides: dict | None = None
+                          ) -> Dict[str, Dict[str, RunResult]]:
+    """All of fig 7 in one dispatch: every app's trace stacked, every
+    mechanism's params batched — one compiled scan per static structure
+    covers the whole apps x mechanisms cross product (``sweep_traces``)."""
+    pairs = [_single_trace(a, n_reqs, seed) for a in app_names]
+    res = sweep_traces([p[0] for p in pairs],
+                       _mech_grid(mechanisms, cfg_overrides),
+                       [p[1] for p in pairs])
+    return {a: dict(zip(mechanisms, r)) for a, r in zip(app_names, res)}
+
+
+def run_eight_core_batch(workloads, mechanisms=PAPER_MECHS,
+                         per_channel: int = 12288, seed: int = 2,
+                         cfg_overrides: dict | None = None
+                         ) -> List[Dict[str, RunResult]]:
+    """Stacked-trace counterpart of ``run_eight_core`` for fig 8: W
+    multiprogrammed workloads run as one W*C-channel batch per structure."""
+    trs = [traces.build_trace(apps, 4, per_channel, seed)
+           for _, _, apps in workloads]
+    res = sweep_traces(trs, _mech_grid(mechanisms, cfg_overrides),
+                       [apps for _, _, apps in workloads])
+    return [dict(zip(mechanisms, r)) for r in res]
 
 
 def speedup_summary(results: Dict[str, RunResult]) -> Dict[str, float]:

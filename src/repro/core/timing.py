@@ -6,15 +6,21 @@ runs on exact int32 arithmetic (float32 timestamps lose precision past ~16 ms).
 A ``MechConfig`` (one evaluated system point) splits into two halves
 (DESIGN.md §3):
 
- * ``StaticConfig`` — mechanism kind, FTS geometry (``n_slots``,
-   ``segs_per_row``) and replacement policy.  These set array *shapes* and
-   trace-time branches, so they are jit static arguments: one compilation
-   per distinct ``StaticConfig``.
+ * ``StaticConfig`` — mechanism kind, replacement policy, and the *padded*
+   FTS allocation (``max_slots``, ``max_segs_per_row``).  These set array
+   *shapes* and trace-time branches, so they are jit static arguments: one
+   compilation per distinct ``StaticConfig``.
  * ``MechParams`` — every remaining knob (timings in ticks, ``seg_blocks``,
-   ``insert_threshold``, ``benefit_max``) as an int32 pytree that is passed
-   *traced* into the compiled scan, so configs differing only in params
-   share one compilation and can be ``jax.vmap``-ed as a stacked batch
-   (``core/dram.py:run_sweep``).
+   ``insert_threshold``, ``benefit_max``, and the *effective* FTS geometry
+   ``n_slots``/``segs_per_row``) as an int32 pytree that is passed *traced*
+   into the compiled scan, so configs differing only in params — including
+   cache capacity and segment size — share one compilation and can be
+   ``jax.vmap``-ed as a stacked batch (``core/dram.py:run_sweep``).
+
+The padded maxima are bucketed (``DEFAULT_MAX_SLOTS`` etc., covering every
+paper grid) so that whole capacity/segment-size sweeps collapse onto ONE
+``StaticConfig``; exotic oversized configs round up to the next power of
+two and get their own structure.
 """
 from __future__ import annotations
 
@@ -103,18 +109,40 @@ MECHANISMS = ("base", "lisa_villa", "figcache_slow", "figcache_fast",
               "figcache_ideal", "lldram")
 
 
+# Padded FTS allocation buckets (DESIGN.md §3).  Every paper grid fits:
+#   max_slots:        seg_blocks=8 -> 64 cache rows x 16 segs = 1024 slots;
+#                     lisa_villa -> 512 rows x 1 seg = 512 slots.
+#   max_segs_per_row: row_blocks // min paper seg_blocks = 128 // 8 = 16.
+# Keeping one shared bucket is what makes capacity (fig 12) and segment-size
+# (fig 13) sweeps compile exactly once; configs that exceed a bucket round up
+# to the next power of two and get their own static structure.
+DEFAULT_MAX_SLOTS = 1024
+DEFAULT_MAX_SEGS_PER_ROW = 16
+
+
+def _pad_bucket(n: int, default: int) -> int:
+    if n <= default:
+        return default
+    p = default
+    while p < n:
+        p <<= 1
+    return p
+
+
 @dataclasses.dataclass(frozen=True)
 class StaticConfig:
     """The shape-/branch-determining half of a ``MechConfig``.
 
     Hashable and tiny: used as a jit static argument and as the grouping key
     of ``simulator.sweep``.  Two configs with equal ``StaticConfig`` share one
-    compiled scan.  ``n_slots``/``segs_per_row`` are normalized to 1 for
-    cache-less mechanisms so the FTS arrays collapse to placeholders.
+    compiled scan.  ``max_slots``/``max_segs_per_row`` are the *padded* FTS
+    allocation (the effective ``n_slots``/``segs_per_row`` travel traced in
+    ``MechParams``); both are normalized to 1 for cache-less mechanisms so
+    the FTS arrays collapse to placeholders.
     """
     mechanism: str
-    n_slots: int
-    segs_per_row: int
+    max_slots: int
+    max_segs_per_row: int
     policy: str
 
     @property
@@ -135,9 +163,11 @@ class StaticConfig:
 class MechParams(NamedTuple):
     """Dynamic (traced) half of a ``MechConfig``: int32 scalars, stackable.
 
-    Leaves carry DRAM timings in ticks plus the mechanism knobs that do not
-    change array shapes.  A batch of ``MechParams`` with a leading axis is
-    what ``dram.run_sweep`` vmaps over.
+    Leaves carry DRAM timings in ticks plus the mechanism knobs — including
+    the *effective* FTS geometry ``n_slots``/``segs_per_row``, which only
+    select the live prefix of the padded arrays (``StaticConfig.max_slots``)
+    and therefore need not be jit-static.  A batch of ``MechParams`` with a
+    leading axis is what ``dram.run_sweep`` vmaps over.
     """
     rcd: jax.Array
     rp: jax.Array
@@ -151,6 +181,8 @@ class MechParams(NamedTuple):
     seg_blocks: jax.Array
     insert_threshold: jax.Array
     benefit_max: jax.Array
+    n_slots: jax.Array
+    segs_per_row: jax.Array
 
 
 @dataclasses.dataclass(frozen=True)
@@ -191,10 +223,26 @@ class MechConfig:
 
     @property
     def static(self) -> StaticConfig:
+        """Padded static structure: capacity/segment-size grids that fit the
+        default buckets all map to the SAME value (one compiled scan)."""
+        if not self.has_cache:
+            return StaticConfig(self.mechanism, 1, 1, self.policy)
         return StaticConfig(
             mechanism=self.mechanism,
-            n_slots=self.n_slots if self.has_cache else 1,
-            segs_per_row=self.segs_per_row if self.has_cache else 1,
+            max_slots=_pad_bucket(self.n_slots, DEFAULT_MAX_SLOTS),
+            max_segs_per_row=_pad_bucket(self.segs_per_row,
+                                         DEFAULT_MAX_SEGS_PER_ROW),
+            policy=self.policy,
+        )
+
+    @property
+    def exact_static(self) -> StaticConfig:
+        """Unpadded static structure (``max == actual``): the per-config
+        reference that benchmarks/tests compare the padded path against."""
+        return StaticConfig(
+            mechanism=self.mechanism,
+            max_slots=self.n_slots if self.has_cache else 1,
+            max_segs_per_row=self.segs_per_row if self.has_cache else 1,
             policy=self.policy,
         )
 
@@ -207,6 +255,8 @@ class MechConfig:
             seg_blocks=i32(self.seg_blocks),
             insert_threshold=i32(self.insert_threshold),
             benefit_max=i32((1 << self.benefit_bits) - 1),
+            n_slots=i32(self.n_slots if self.has_cache else 1),
+            segs_per_row=i32(self.segs_per_row if self.has_cache else 1),
         )
 
 

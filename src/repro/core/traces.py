@@ -110,7 +110,7 @@ def gen_core_stream(app: AppParams, core: int, n_reqs: int, seed: int,
     recovers (paper §1, §3).  Contexts draw pages from a slowly-turning
     *active window* (working-set phase), so temporally-close pages are
     re-visited together — the locality structure RowBenefit eviction is
-    designed around (§5.1).  Requests arrive in bursts of `burst`.
+    designed around (paper §6).  Requests arrive in bursts of `burst`.
     """
     rng = np.random.default_rng(seed)
     probs = _zipf_probs(app.n_pages, app.zipf_a)
@@ -132,7 +132,7 @@ def gen_core_stream(app: AppParams, core: int, n_reqs: int, seed: int,
                     "start": int(rng.integers(0, 16)), "v": 0}
         # sweep the working set coherently (blocked-algorithm phase
         # behavior): revisit order matches prior visit order, which is the
-        # temporal structure RowBenefit co-location exploits (§5.1)
+        # temporal structure RowBenefit co-location exploits (paper §6)
         if rng.random() < 0.7:
             page = int(window[cursor % len(window)])
             cursor += 1

@@ -30,6 +30,7 @@ def embed_cache_init(d: int, fig: FIGKVConfig, dtype=jnp.bfloat16
     slots = fig.fast_rows * fig.segs_per_row
     return EmbedCache(
         fast=jnp.zeros((slots, fig.seg_tokens, d), dtype),
+        # unpadded tag store (max == actual; see core/fts.py shape notes)
         fts=fts_lib.init(slots, fig.segs_per_row),
         hits=jnp.int32(0), lookups=jnp.int32(0))
 

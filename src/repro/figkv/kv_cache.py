@@ -48,6 +48,8 @@ def figkv_init(batch: int, s_max: int, hkv: int, d: int,
                fig: FIGKVConfig, dtype=jnp.bfloat16) -> FigKVState:
     n_segs = s_max // fig.seg_tokens
     slots = fig.fast_rows * fig.segs_per_row
+    # unpadded tag store (max == actual): figkv never sweeps FTS shapes, so
+    # the padded/masked machinery of core/fts.py is inert here
     one = fts_lib.init(slots, fig.segs_per_row)
     fts = jax.tree.map(
         lambda a: jnp.broadcast_to(a, (batch,) + a.shape).copy(), one)

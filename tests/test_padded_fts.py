@@ -1,0 +1,163 @@
+"""Padded/masked FTS regression + property tests (DESIGN.md §3).
+
+The shape-polymorphic tag store allocates at ``max_slots``/``max_segs_per_row``
+and masks every slot-selecting reduction to the traced ``n_slots`` prefix.
+The contract under test: a padded store with ``n_slots < max_slots`` is
+**bitwise-equal** to an unpadded store of exactly ``n_slots`` — same hits,
+same slots, same evictions, same final state — for every replacement policy
+and across insertion thresholds.  That equivalence is what lets capacity
+(fig 12) and segment-size (fig 13) grids share ONE compiled scan.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dram, traces
+from repro.core import fts as fts_lib
+from repro.core.timing import paper_config
+
+POLICIES = ("row_benefit", "segment_benefit", "lru", "random")
+
+N_SLOTS, SPR = 16, 4          # effective geometry: 4 rows x 4 segments
+MAX_SLOTS, MAX_SEGS = 48, 8   # padded allocation (deliberately not a
+                              # multiple of the effective row size)
+
+
+def _replay(segs, policy, threshold, max_slots, max_segs, n_slots, spr):
+    """Drive one tag store through a lookup/touch/should_insert/insert
+    sequence; return (final state, event log)."""
+    fts = fts_lib.init(max_slots, max_segs)
+    log = []
+    for step, s in enumerate(segs):
+        hit, slot = fts_lib.lookup(fts, jnp.int32(s))
+        if bool(hit):
+            fts = fts_lib.touch(fts, slot, jnp.bool_(step % 3 == 0),
+                                jnp.int32(step), 31)
+            log.append(("hit", int(slot)))
+        else:
+            want, fts = fts_lib.should_insert(fts, jnp.int32(s), threshold)
+            if not bool(want):
+                log.append(("defer",))
+                continue
+            res = fts_lib.insert(fts, jnp.int32(s), jnp.bool_(False),
+                                 jnp.int32(step), policy=policy,
+                                 segs_per_row=spr, n_slots=n_slots)
+            fts = res.fts
+            log.append(("ins", int(res.slot), bool(res.evicted_valid),
+                        bool(res.evicted_dirty), int(res.evicted_tag)))
+    return fts, log
+
+
+def _assert_padded_matches_unpadded(segs, policy, threshold):
+    pad, log_pad = _replay(segs, policy, threshold,
+                           MAX_SLOTS, MAX_SEGS, N_SLOTS, SPR)
+    ref, log_ref = _replay(segs, policy, threshold,
+                           N_SLOTS, SPR, N_SLOTS, SPR)
+    assert log_pad == log_ref, (policy, threshold)
+    for name in ("tags", "valid", "dirty", "benefit", "last_use"):
+        p = np.asarray(getattr(pad, name))
+        r = np.asarray(getattr(ref, name))
+        assert np.array_equal(p[:N_SLOTS], r), (policy, threshold, name)
+        # the padding invariant: slots >= n_slots never change
+        if name == "valid":
+            assert not p[N_SLOTS:].any(), (policy, threshold)
+        if name == "tags":
+            assert (p[N_SLOTS:] == -1).all(), (policy, threshold)
+    assert int(pad.evict_row) == int(ref.evict_row)
+    assert np.array_equal(np.asarray(pad.evict_mask)[:SPR],
+                          np.asarray(ref.evict_mask))
+    assert not np.asarray(pad.evict_mask)[SPR:].any()
+
+
+# enough traffic to fill 16 slots several times over -> real evictions
+_PRESSURE = [(i * 7 + (i * i) % 11) % 40 for i in range(70)]
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("threshold", [1, 2, 4])
+def test_padded_fts_bitwise_equals_unpadded(policy, threshold):
+    _assert_padded_matches_unpadded(_PRESSURE, policy, threshold)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 60), min_size=1, max_size=50),
+       st.sampled_from(POLICIES))
+def test_padded_fts_equivalence_property(segs, policy):
+    _assert_padded_matches_unpadded(segs, policy, 1)
+
+
+# ---------------------------------------------------------------------------
+# simulator level: padded scan vs unpadded per-config scan, bit for bit
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _bank_hammer_trace(n=768):
+    """All requests on one bank, row/col pattern that overflows a small
+    cache -> constant insert/evict pressure through the padded pickers."""
+    idx = np.arange(n)
+    return dram.Trace(
+        t_issue=jnp.asarray(idx * 16, jnp.int32),
+        bank=jnp.zeros(n, jnp.int32),
+        row=jnp.asarray((idx * 7) % 97, jnp.int32),
+        col=jnp.asarray((idx * 13) % 128, jnp.int32),
+        is_write=jnp.asarray(idx % 5 == 0, bool),
+        core=jnp.asarray(idx % 8, jnp.int32),
+    )
+
+
+def _assert_counters_equal(ref, got, ctx):
+    for name, x, y in zip(ref._fields, ref, got):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), (ctx, name)
+
+
+@pytest.mark.parametrize("policy", ["row_benefit", "segment_benefit"])
+@pytest.mark.parametrize("threshold", [1, 2, 4])
+def test_padded_scan_matches_unpadded_scan(policy, threshold):
+    """run_channel (padded to max_slots=1024) vs run_channel_exact (FTS of
+    exactly n_slots): identical counters across policies and thresholds."""
+    tr = _bank_hammer_trace()
+    cfg = paper_config("figcache_fast", cache_rows=2, policy=policy,
+                       insert_threshold=threshold)
+    _assert_counters_equal(dram.run_channel_exact(tr, cfg),
+                           dram.run_channel(tr, cfg), (policy, threshold))
+
+
+def test_capacity_and_segment_grids_compile_once():
+    """The ISSUE-2 acceptance bar: a whole capacity grid and a whole
+    segment-size grid each dispatch as ONE compiled scan (fig 12 / fig 13),
+    with counters bitwise-equal to per-config unpadded runs."""
+    tr = _bank_hammer_trace()
+    grids = {
+        "capacity": [paper_config("figcache_fast", cache_rows=cr)
+                     for cr in (2, 4, 16, 64)],
+        "segment": [paper_config("figcache_fast", seg_blocks=sb)
+                    for sb in (8, 16, 64)],
+    }
+    for label, cfgs in grids.items():
+        static = cfgs[0].static
+        assert all(c.static == static for c in cfgs), label
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *[c.params() for c in cfgs])
+        j0 = dram.jit_trace_count()
+        swept = jax.block_until_ready(dram.run_sweep(tr, static, batch))
+        assert dram.jit_trace_count() - j0 <= 1, label
+        for i, cfg in enumerate(cfgs):
+            _assert_counters_equal(
+                dram.run_channel_exact(tr, cfg),
+                jax.tree.map(lambda a, i=i: a[i], swept), (label, i))
+
+
+def test_grid_results_actually_differ():
+    """Guard against a vacuous equivalence: under pressure the capacity and
+    segment-size knobs must change behavior (hits/relocations differ)."""
+    tr = _bank_hammer_trace()
+    small = dram.run_channel(tr, paper_config("figcache_fast", cache_rows=2))
+    big = dram.run_channel(tr, paper_config("figcache_fast", cache_rows=64))
+    assert int(small.cache_hits) != int(big.cache_hits)
+    s8 = dram.run_channel(tr, paper_config("figcache_fast", seg_blocks=8))
+    s64 = dram.run_channel(tr, paper_config("figcache_fast", seg_blocks=64))
+    assert int(s8.reloc_blocks) != int(s64.reloc_blocks)

@@ -70,6 +70,36 @@ def test_run_sweep_multi_channel():
         _assert_counters_equal(ref, got, ("multi", i))
 
 
+def test_sweep_traces_matches_per_workload_sweep():
+    """Cross-workload stacking (figs 7/8 path): results[w][i] must equal a
+    plain per-workload ``sweep`` bit for bit — counters, IPC and energy —
+    for single-channel AND multi-channel traces, across several statics."""
+    cfgs = [paper_config("base"),
+            paper_config("figcache_fast"),
+            paper_config("figcache_fast", insert_threshold=2),
+            paper_config("lisa_villa")]
+    a1 = (traces.app_params("libquantum"),)
+    a2 = (traces.app_params("mcf"),)
+    single = [(jax.tree.map(lambda x: x[0],
+                            traces.build_trace(list(a), 1, 1024, s)), a)
+              for a, s in ((a1, 1), (a2, 2), (a1, 3))]
+    multi_apps = tuple(traces.app_params(n) for n in ("libquantum", "mcf"))
+    multi = [(traces.build_trace(list(multi_apps), 2, 1024, s), multi_apps)
+             for s in (4, 5)]
+    for label, group in (("single", single), ("multi", multi)):
+        trs = [t for t, _ in group]
+        apps_list = [a for _, a in group]
+        res = simulator.sweep_traces(trs, cfgs, apps_list)
+        for w, (tr, apps) in enumerate(group):
+            ref = simulator.sweep(tr, cfgs, apps)
+            for i in range(len(cfgs)):
+                _assert_counters_equal(ref[i].counters, res[w][i].counters,
+                                       (label, w, i))
+                assert np.array_equal(ref[i].ipc, res[w][i].ipc)
+                assert ref[i].system_energy_nj == res[w][i].system_energy_nj
+                assert ref[i].exec_time_ns == res[w][i].exec_time_ns
+
+
 def test_simulator_sweep_matches_run_mechanism():
     """Grouped dispatch (several static structures in one grid) must agree
     with the one-config-at-a-time path, in input order."""
