@@ -46,7 +46,8 @@ def main(argv=None) -> None:
         ("fig15_insertion", fig15_insertion, lambda s: s.get("th=1")),
         ("sweep_engine", sweep_engine,
          lambda s: (f"jits {s['jits_before']}->{s['jits_after']} "
-                    f"cap={s['jits_capacity']} seg={s['jits_segment']}")),
+                    f"cap={s['jits_capacity']} seg={s['jits_segment']} "
+                    f"hotloop={s['hotloop_speedup']}x")),
         ("overhead_table", overhead,
          lambda s: s.get("fts_kB_per_channel")),
     ]

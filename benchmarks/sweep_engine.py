@@ -1,4 +1,5 @@
-"""Sweep-engine microbenchmark: jit count + us-per-config, before vs after.
+"""Sweep-engine microbenchmark: jit counts, us-per-config and hot-loop
+steps/sec, before vs after.
 
 "Before" reproduces the seed's dispatch: every ``MechConfig`` point gets its
 own freshly-jitted scan (params baked into the compilation), so a grid of N
@@ -16,17 +17,27 @@ Three grids are measured and ASSERTED to batch into a single compilation:
    ``segs_per_row``.
 
 The last two only batch because the FTS is shape-polymorphic: arrays are
-padded to ``StaticConfig.max_slots`` and the effective ``n_slots`` /
-``segs_per_row`` ride traced in ``MechParams``.  Each batched run is also
-cross-checked bitwise against per-config *unpadded* runs
-(``dram.run_channel_exact``: FTS allocated at exactly n_slots), so the
-1-compilation behavior is not bought with a semantics change.
+padded to the grid's shared bucket (``timing.shared_static``) and the
+effective ``n_slots`` / ``segs_per_row`` ride traced in ``MechParams``.
+Each batched run is also cross-checked bitwise against per-config
+*unpadded* runs (``dram.run_channel_exact``: FTS allocated at exactly
+n_slots), so the 1-compilation behavior is not bought with a semantics
+change.
+
+The HOT-LOOP section (DESIGN.md §9) measures per-step cost on the default
+fig-12 capacity grid: the ``"dense"`` scan variant re-derives every FTS
+decision from scratch each step (the pre-aggregate loop), the default
+``"fused"`` variant updates carried aggregates with per-(bank, slot)
+scalar writes.  Both are bitwise-identical (``tests/test_hotloop.py``);
+steps/sec and the speedup land in ``BENCH_hotloop.json`` so the perf
+trajectory is recorded per PR (CI uploads it to the job summary).
 
 Compilations are counted via ``dram.JIT_TRACE_LOG`` (the scan body logs one
 entry per trace).
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -35,7 +46,7 @@ import numpy as np
 
 from benchmarks import common
 from repro.core import dram
-from repro.core.timing import paper_config
+from repro.core.timing import paper_config, shared_static
 
 # 8 configs, one static structure: threshold x benefit_bits grid
 GRID = [dict(insert_threshold=th, benefit_bits=bb)
@@ -43,6 +54,10 @@ GRID = [dict(insert_threshold=th, benefit_bits=bb)
 # fig 12 / fig 13 knobs — distinct grid sizes so each traces separately
 CAPACITY_GRID = [dict(cache_rows=cr) for cr in (2, 4, 8, 16, 32, 64)]
 SEGMENT_GRID = [dict(seg_blocks=sb) for sb in (8, 16, 32, 64, 128)]
+# the default fig-12 capacity grid: the hot-loop steps/sec workload
+HOTLOOP_GRID = [dict(cache_rows=cr) for cr in (4, 8, 16, 32, 64)]
+
+BENCH_JSON = "BENCH_hotloop.json"
 
 
 def _stack_params(cfgs):
@@ -60,9 +75,7 @@ def _shape_grid_jits(tr, grid_kw, label):
     """Batch one shape-changing grid; return its jit count after asserting
     bitwise equality with per-config unpadded runs."""
     cfgs = [paper_config("figcache_fast", **kw) for kw in grid_kw]
-    static = cfgs[0].static
-    assert all(c.static == static for c in cfgs), \
-        f"{label} grid must share one padded static structure"
+    static = shared_static(cfgs)
     j0 = dram.jit_trace_count()
     after = jax.block_until_ready(
         dram.run_sweep(tr, static, _stack_params(cfgs)))
@@ -74,10 +87,46 @@ def _shape_grid_jits(tr, grid_kw, label):
     return jits
 
 
+def _hotloop_report(tr):
+    """steps/sec of the fused vs dense scan bodies on the fig-12 capacity
+    grid (one compiled scan each), plus their bitwise cross-check."""
+    cfgs = [paper_config("figcache_fast", **kw) for kw in HOTLOOP_GRID]
+    static = shared_static(cfgs)
+    batch = _stack_params(cfgs)
+    n_steps = len(cfgs) * int(np.asarray(tr.t_issue).size)
+    reps = 1 if common.IS_QUICK else 3
+    out, rate, jits = {}, {}, {}
+    for variant in ("dense", "fused"):
+        j0 = dram.jit_trace_count()
+        out[variant] = jax.block_until_ready(
+            dram.run_sweep(tr, static, batch, variant=variant))  # warm/compile
+        jits[variant] = dram.jit_trace_count() - j0
+        t0 = time.time()
+        for _ in range(reps):
+            jax.block_until_ready(
+                dram.run_sweep(tr, static, batch, variant=variant))
+        rate[variant] = n_steps * reps / (time.time() - t0)
+    _assert_counters_equal(out["dense"], out["fused"], "hotloop")
+    speedup = rate["fused"] / rate["dense"]
+    # the DESIGN.md §9 acceptance bar is >= 2x; under --quick CI (one rep,
+    # shared noisy runner) enforce a looser tripwire so a real regression
+    # to parity still fails loudly without flaking on machine noise
+    floor = 1.3 if common.IS_QUICK else 2.0
+    assert speedup >= floor, \
+        f"hot-loop speedup {speedup:.2f}x below the {floor}x floor"
+    return {
+        "steps_per_sec_dense": round(rate["dense"]),
+        "steps_per_sec_fused": round(rate["fused"]),
+        "hotloop_speedup": round(rate["fused"] / rate["dense"], 2),
+        "jits_hotloop_dense": jits["dense"],
+        "jits_hotloop_fused": jits["fused"],
+        "n_steps_per_rep": n_steps,
+    }
+
+
 def run():
     cfgs = [paper_config("figcache_fast", **kw) for kw in GRID]
-    static = cfgs[0].static
-    assert all(c.static == static for c in cfgs), "grid must share a static"
+    static = shared_static(cfgs)
     tr, _apps = common.eight_trace(common.WL_IDX[100][1], per_channel=2048)
 
     # ---- before: per-config fresh jit (seed behavior) ---------------------
@@ -117,6 +166,9 @@ def run():
     assert jits_capacity <= 1, f"capacity grid took {jits_capacity} jits"
     assert jits_segment <= 1, f"segment grid took {jits_segment} jits"
 
+    # ---- hot loop: fused vs dense steps/sec (DESIGN.md §9) ----------------
+    hot = _hotloop_report(tr)
+
     n = len(cfgs)
     summary = {
         "n_configs": n,
@@ -127,7 +179,11 @@ def run():
         "us_per_config_before": round(t_before / n * 1e6),
         "us_per_config_after": round(t_after / n * 1e6),
         "wall_speedup": round(t_before / max(t_after, 1e-9), 2),
+        **hot,
     }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(summary, f, indent=2, sort_keys=True)
+        f.write("\n")
     rows = [summary]
     return rows, summary
 

@@ -20,15 +20,24 @@ Modeling abstractions (documented in DESIGN.md §7):
 Timestamps are int32 ticks (1/8 ns).  Latency accumulators are int32 ns.
 
 Sweep engine (DESIGN.md §3): the scan body is built from the *static* half of
-a config only (``timing.StaticConfig`` — the mechanism/policy branches plus
-the padded FTS allocation ``max_slots``/``max_segs_per_row``); every numeric
-knob, *including the effective FTS geometry* ``n_slots``/``segs_per_row``,
-arrives as a traced ``timing.MechParams`` pytree and the FTS masks itself to
-the live slot prefix.  One compilation therefore serves every config sharing
-a static structure — capacity and segment-size grids included — and
-``run_sweep`` vmaps the very same scan over a stacked params batch so a whole
-config grid executes as one XLA program — the harness-side analogue of the
-relocation-granularity waste FIGARO removes in hardware.
+a config only (``timing.StaticConfig``); every numeric knob, *including the
+effective FTS geometry* ``n_slots``/``segs_per_row``, arrives as a traced
+``timing.MechParams`` pytree and the FTS masks itself to the live slot
+prefix.  One compilation therefore serves every config sharing a static
+structure, and ``run_sweep`` vmaps the very same scan over a stacked params
+batch so a whole config grid executes as one XLA program.
+
+Hot loop (DESIGN.md §9): the default ``"fused"`` scan body performs only the
+work the step's outcome needs — the FTS decisions reduce *carried
+aggregates* (``fts.row_sum`` / free-stack) instead of re-deriving them, and
+every state change is a per-leaf ``(bank, slot)`` scalar scatter guarded by
+value-level selects.  The pre-aggregate body survives as the ``"dense"``
+variant (whole-FTS gathers, tree-wide selects, full write-backs): it is the
+bitwise reference ``tests/test_hotloop.py`` pins the fused loop against and
+the baseline ``benchmarks/sweep_engine.py`` measures steps/sec speedup over.
+``StaticConfig.fts_kernel`` further routes the remaining max_slots-wide
+reductions (tag compare + victim argmin) through the fused Pallas
+``kernels/fts_lookup`` op (pure-JAX fallback off-TPU).
 """
 from __future__ import annotations
 
@@ -41,6 +50,8 @@ import jax.numpy as jnp
 from repro.core import fts as fts_lib
 from repro.core.timing import (DDR4, GEOM, DRAMGeometry, DRAMTimings,
                                MechConfig, MechParams, StaticConfig)
+from repro.kernels.fts_lookup.ops import fts_lookup_op
+from repro.kernels.jax_compat import is_tracer
 
 
 class Trace(NamedTuple):
@@ -57,6 +68,34 @@ class Trace(NamedTuple):
 
 
 N_MSHR = 8  # outstanding misses per core (paper Table 1) — closed-loop throttle
+
+# Ragged-workload padding sentinel (DESIGN.md §9): a request with
+# ``t_issue >= NOOP_ISSUE`` is a NO-OP — it retires with zero latency,
+# touches no bank/bus/MSHR/FTS state and no counter.  ``simulator.
+# sweep_traces`` pads unequal-length traces to a shared scan length with
+# these, the trace-axis analogue of the FTS padding slots.
+NOOP_ISSUE = int(fts_lib.BIG)
+
+
+def noop_pad(trace: Trace, length: int) -> Trace:
+    """Right-pad a (T,)/(C, T) trace to ``length`` requests with no-ops.
+
+    No-ops carry ``t_issue = NOOP_ISSUE`` (so the sorted-by-issue-time
+    invariant holds) and neutral fields everywhere else."""
+    cur = trace.t_issue.shape[-1]
+    assert cur <= length, (cur, length)
+    if cur == length:
+        return trace
+
+    def pad(x, fill):
+        widths = [(0, 0)] * (x.ndim - 1) + [(0, length - cur)]
+        return jnp.pad(x, widths, constant_values=fill)
+
+    return Trace(t_issue=pad(trace.t_issue, NOOP_ISSUE),
+                 bank=pad(trace.bank, 0), row=pad(trace.row, 0),
+                 col=pad(trace.col, 0), is_write=pad(trace.is_write, False),
+                 core=pad(trace.core, 0))
+
 
 # Every trace of a simulator scan (== one XLA compilation) appends a tag here.
 # ``benchmarks/sweep_engine.py`` reads it to report jit counts; tests use it
@@ -132,7 +171,8 @@ def _lisa_hops(row: jax.Array, geom: DRAMGeometry) -> jax.Array:
     return jnp.minimum(m, 4 - m)
 
 
-def make_step(static: StaticConfig, geom: DRAMGeometry = GEOM):
+def make_step(static: StaticConfig, geom: DRAMGeometry = GEOM,
+              variant: str = "fused"):
     """Build the scan body for one *static structure*.
 
     The returned ``step(params, carry, req)`` closes over the padded FTS
@@ -141,7 +181,262 @@ def make_step(static: StaticConfig, geom: DRAMGeometry = GEOM):
     comes in through the traced ``params`` (``timing.MechParams``), so one
     compilation of the scan serves arbitrarily many configs sharing
     ``static``, capacity and segment-size sweeps included (DESIGN.md §3).
+
+    ``variant="fused"`` (default) is the surgical O(1)-update hot loop —
+    carried FTS aggregates, per-(bank, slot) scalar scatters, no-op-request
+    support, optional Pallas lookup.  ``variant="dense"`` is the pre-
+    aggregate reference body (whole-FTS gathers / tree selects / full
+    write-backs, no no-op support): bitwise-identical on real requests,
+    kept as the equivalence bar and benchmark baseline (DESIGN.md §9).
     """
+    if variant == "dense":
+        return _make_step_dense(static, geom)
+    assert variant == "fused", variant
+    cache_base = jnp.int32(geom.n_rows)           # id-space for cache rows
+    reserved_sub = geom.n_subarrays - 1           # figcache_slow region
+    lisa = static.mechanism == "lisa_villa"
+    slow_cache = static.mechanism == "figcache_slow"
+    lldram = static.mechanism == "lldram"
+    max_slots = static.max_slots if static.has_cache else 1
+    max_segs = static.max_segs_per_row if static.has_cache else 1
+
+    def step(params: MechParams, carry, req):
+        state, cnt = carry
+        p = params
+        spr = p.segs_per_row            # traced — rides in MechParams
+        bank = req.bank
+        core = req.core
+        f = state.fts
+        real = req.t_issue < NOOP_ISSUE
+        # closed loop: a core may not have more than N_MSHR requests in
+        # flight — it stalls until the request N_MSHR-ago completed
+        mshr_slot = state.mshr_idx[core]
+        mshr_free = state.mshr_ring[core, mshr_slot]
+        t_ready = jnp.maximum(req.t_issue, mshr_free)
+        t0 = jnp.maximum(t_ready, state.busy[bank])
+        open_b = state.open_row[bank]
+        step_id = cnt.reads + cnt.writes
+
+        # ---- cache lookup + victim candidate (one pass over the bank) ----
+        if static.has_cache:
+            seg = req.row * spr + req.col // p.seg_blocks
+            if slow_cache:   # never cache the subarray hosting reserved rows
+                cacheable = (req.row // geom.rows_per_subarray) != reserved_sub
+            else:
+                cacheable = jnp.bool_(True)
+            row_benefit = static.policy == "row_benefit"
+            if static.fts_kernel:
+                # fused VMEM pass: tag compare + the policy's masked victim
+                # argmin in ONE visit of the bank's row.  Relies on the
+                # in-scan invariant "invalid => tag == -1" (fts.invalidate)
+                if row_benefit:
+                    score, limit = f.row_sum, (p.n_slots + spr - 1) // spr
+                elif static.policy == "segment_benefit":
+                    score, limit = f.benefit, p.n_slots
+                elif static.policy == "lru":
+                    score, limit = f.last_use, p.n_slots
+                else:                       # random: no argmin needed
+                    score, limit = f.tags, jnp.int32(0)
+                hit_raw, slot, cand = fts_lookup_op(
+                    f.tags, score, bank, seg, jnp.asarray(limit, jnp.int32))
+            else:
+                # tag-only compare: in-scan, invalid slots always hold
+                # tags == -1 (init; eviction overwrites valid entries in
+                # place; fts.invalidate — unused here — resets tags), and
+                # segment ids are >= 0, so the valid bitmap is redundant.
+                # The fused-vs-dense bitwise test pins this invariant.
+                m = f.tags[bank] == seg
+                hit_raw = jnp.any(m)
+                slot = jnp.argmax(m).astype(jnp.int32)
+                if row_benefit:
+                    rows = jnp.arange(max_slots, dtype=jnp.int32)
+                    cand = fts_lib.masked_argmin(f.row_sum[bank],
+                                                 rows * spr < p.n_slots)
+                elif static.policy in ("segment_benefit", "lru"):
+                    arr = f.benefit if static.policy == "segment_benefit" \
+                        else f.last_use
+                    active = jnp.arange(max_slots, dtype=jnp.int32) < p.n_slots
+                    cand = fts_lib.masked_argmin(arr[bank], active)
+                else:
+                    cand = jnp.int32(0)
+            hit = hit_raw & cacheable & real
+
+            # ---- replacement decision from carried aggregates ------------
+            if row_benefit:
+                row_sel, mask_sel = fts_lib.pick_victim_row(
+                    f.row_sum[bank], f.evict_row[bank], f.evict_mask[bank],
+                    spr, p.n_slots, new_row=cand)
+                bidx = jnp.clip(row_sel * spr +
+                                jnp.arange(max_segs, dtype=jnp.int32),
+                                0, max_slots - 1)
+                victim_slot, mask_new = fts_lib.pick_victim_in_row(
+                    f.benefit[bank, bidx], mask_sel, row_sel, spr)
+            elif static.policy == "random":
+                victim_slot = fts_lib.random_victim(step_id, p.n_slots)
+            else:
+                victim_slot = cand
+            n_valid_b = f.n_valid[bank]
+            has_free = n_valid_b < p.n_slots
+            free_slot = f.free_list[bank,
+                                    jnp.minimum(n_valid_b, max_slots - 1)]
+
+            # ---- insertion policy (consecutive-miss tracker) -------------
+            n_track = f.miss_tags.shape[1]
+            tr_idx = jnp.remainder(seg, n_track)
+            same = f.miss_tags[bank, tr_idx] == seg
+            cnt_new = jnp.where(same, f.miss_cnt[bank, tr_idx] + 1, 1)
+            want = (p.insert_threshold <= 1) | (cnt_new >= p.insert_threshold)
+            # the tracker advances on actual (cacheable) misses only
+            advance = real & cacheable & ~hit_raw
+            do_ins = ~hit & cacheable & want & real
+
+            # ---- surgical per-(bank, slot) state update ------------------
+            # exactly one slot w is written per step (hit slot or landing
+            # slot); when nothing happens the write stores back old values
+            ins_slot = jnp.where(has_free, free_slot, victim_slot)
+            w = jnp.where(hit, slot, ins_slot)
+            old_tag = f.tags[bank, w]
+            old_valid = f.valid[bank, w]
+            old_dirty = f.dirty[bank, w]
+            old_benefit = f.benefit[bank, w]
+            old_last = f.last_use[bank, w]
+            ev_valid = do_ins & ~has_free & old_valid
+            ev_dirty = ev_valid & old_dirty
+            ev_tag = old_tag
+            b_touch = jnp.minimum(old_benefit + 1, p.benefit_max)
+            new_benefit = jnp.where(do_ins, 1,
+                                    jnp.where(hit, b_touch, old_benefit))
+            use_victim = do_ins & ~has_free
+            if row_benefit:
+                new_evict_row = jnp.where(use_victim, row_sel,
+                                          f.evict_row[bank])
+                new_evict_mask = jnp.where(use_victim, mask_new,
+                                           f.evict_mask[bank])
+            else:
+                new_evict_row = f.evict_row[bank]
+                new_evict_mask = f.evict_mask[bank]
+            new_fts = f._replace(
+                tags=f.tags.at[bank, w].set(jnp.where(do_ins, seg, old_tag)),
+                valid=f.valid.at[bank, w].set(old_valid | do_ins),
+                dirty=f.dirty.at[bank, w].set(
+                    jnp.where(do_ins, req.is_write,
+                              old_dirty | (hit & req.is_write))),
+                benefit=f.benefit.at[bank, w].set(new_benefit),
+                last_use=f.last_use.at[bank, w].set(
+                    jnp.where(hit | do_ins, step_id, old_last)),
+                row_sum=f.row_sum.at[bank, w // spr].add(
+                    new_benefit - old_benefit),
+                evict_row=f.evict_row.at[bank].set(new_evict_row),
+                evict_mask=f.evict_mask.at[bank].set(new_evict_mask),
+                miss_tags=f.miss_tags.at[bank, tr_idx].set(
+                    jnp.where(advance, seg, f.miss_tags[bank, tr_idx])),
+                miss_cnt=f.miss_cnt.at[bank, tr_idx].set(
+                    jnp.where(advance, cnt_new, f.miss_cnt[bank, tr_idx])),
+                n_valid=f.n_valid.at[bank].add(
+                    (do_ins & has_free).astype(jnp.int32)),
+            )
+        else:
+            seg = jnp.int32(0)
+            hit, slot = jnp.bool_(False), jnp.int32(0)
+            do_ins = ev_valid = ev_dirty = jnp.bool_(False)
+            ev_tag = ins_slot = jnp.int32(0)
+            new_fts = state.fts
+
+        target_row = jnp.where(hit, cache_base + slot // spr, req.row)
+
+        # ---- service latency ---------------------------------------------
+        served_fast = (hit & static.fast_cache) | lldram
+        rcd = jnp.where(served_fast, p.rcd_fast, p.rcd)
+        rp = jnp.where(served_fast, p.rp_fast, p.rp)
+        row_hit = open_b == target_row
+        closed = open_b < 0
+        pre_act = jnp.where(row_hit, 0, rcd + jnp.where(closed, 0, rp))
+        # the 64 B burst serializes on the shared channel data bus — a
+        # contention source no in-DRAM cache can relieve
+        done = jnp.maximum(t0 + pre_act + p.cas, state.bus_free) + p.bl
+        # bank occupancy: column accesses pipeline at tCCD; an ACT(+PRE)
+        # occupies the bank for its own duration before the CAS can pipeline
+        serv_end = t0 + pre_act + p.ccd
+
+        # ---- relocation cost (miss-path insertion) ------------------------
+        if static.has_cache:
+            if static.free_reloc:
+                reloc_cost = jnp.int32(0)
+            elif lisa:
+                # whole-row relocation, distance-dependent (src row is open)
+                hops = _lisa_hops(req.row, geom)
+                reloc_cost = hops * p.lisa_hop + p.rcd_fast
+                wb_hops = _lisa_hops(ev_tag, geom)
+                reloc_cost += jnp.where(
+                    ev_dirty, wb_hops * p.lisa_hop + p.rcd, 0)
+            else:
+                # FIGARO: seg_blocks RELOCs through the GRB.  The source row
+                # is already open serving the miss (§8.1) and the destination
+                # ACT overlaps via the per-subarray row-address latch (§4.1
+                # "multiple activations without a precharge"), so only the
+                # RELOC column transfers occupy the bank's column path.
+                reloc_cost = p.seg_blocks * p.reloc
+                # dirty-victim writeback needs the victim's home row opened
+                reloc_cost += jnp.where(
+                    ev_dirty, p.seg_blocks * p.reloc + p.rcd, 0)
+            reloc_cost = jnp.where(do_ins, reloc_cost, 0)
+            # after insertion the destination cache row is left open
+            new_open = jnp.where(
+                do_ins, cache_base + ins_slot // spr, target_row)
+            moved = jnp.where(do_ins, p.seg_blocks, 0)
+            wb = jnp.where(do_ins & ev_dirty, p.seg_blocks, 0)
+            n_ins = do_ins.astype(jnp.int32)
+        else:
+            reloc_cost = jnp.int32(0)
+            new_open = target_row
+            moved = wb = n_ins = jnp.int32(0)
+
+        state = BankState(
+            open_row=state.open_row.at[bank].set(
+                jnp.where(real, new_open, open_b)),
+            busy=state.busy.at[bank].set(
+                jnp.where(real, serv_end + reloc_cost, state.busy[bank])),
+            fts=new_fts,
+            mshr_ring=state.mshr_ring.at[core, mshr_slot].set(
+                jnp.where(real, done, mshr_free)),
+            mshr_idx=state.mshr_idx.at[core].set(
+                jnp.where(real, (mshr_slot + 1) % N_MSHR, mshr_slot)),
+            bus_free=jnp.where(real, done, state.bus_free),
+        )
+
+        # ---- counters ------------------------------------------------------
+        act = ((~row_hit) & real).astype(jnp.int32)
+        lat_ns = ((done - t_ready) // 8).astype(jnp.int32)
+        cnt = Counters(
+            acts_slow=cnt.acts_slow + act * (~served_fast),
+            acts_fast=cnt.acts_fast + act * served_fast,
+            reads=cnt.reads + ((~req.is_write) & real).astype(jnp.int32),
+            writes=cnt.writes + (req.is_write & real).astype(jnp.int32),
+            reloc_blocks=cnt.reloc_blocks + moved,
+            wb_blocks=cnt.wb_blocks + wb,
+            row_hits=cnt.row_hits + (row_hit & real).astype(jnp.int32),
+            cache_hits=cnt.cache_hits + hit.astype(jnp.int32),
+            insertions=cnt.insertions + n_ins,
+            lat_sum_ns=cnt.lat_sum_ns.at[core].add(
+                jnp.where(real, lat_ns, 0)),
+            req_cnt=cnt.req_cnt.at[core].add(real.astype(jnp.int32)),
+            # the request is not retired until its burst clears the shared
+            # data bus, which can outlast the bank's own serv_end+reloc —
+            # take the max over *both* (execution time feeds core/energy.py)
+            t_end=jnp.maximum(cnt.t_end, jnp.where(
+                real, jnp.maximum(done, serv_end + reloc_cost), 0)),
+        )
+        return (state, cnt), None
+
+    return step
+
+
+def _make_step_dense(static: StaticConfig, geom: DRAMGeometry = GEOM):
+    """The pre-aggregate scan body (DESIGN.md §9 "dense"): whole-FTS bank
+    gathers, tree-wide selects and full write-backs.  Bitwise-identical to
+    the fused variant on real requests (``tests/test_hotloop.py``); does NOT
+    understand ragged no-op padding.  Kept as the equivalence reference and
+    the steps/sec baseline of ``benchmarks/sweep_engine.py``."""
     cache_base = jnp.int32(geom.n_rows)           # id-space for cache rows
     reserved_sub = geom.n_subarrays - 1           # figcache_slow region
     lisa = static.mechanism == "lisa_villa"
@@ -202,9 +497,13 @@ def make_step(static: StaticConfig, geom: DRAMGeometry = GEOM):
             fts_miss = jax.tree.map(
                 lambda m, b: jnp.where(cacheable, m, b), fts_miss, fts_b)
             do_ins = ~hit & cacheable & want
+            # recompute=True: pay the seed's full-reduction insert cost
+            # (free-slot argmin + segment-summed row benefits) — the dense
+            # variant is the pre-aggregate baseline AND the oracle the
+            # carried aggregates are pinned against
             ins = fts_lib.insert(fts_miss, seg, req.is_write, step_id,
                                  policy=static.policy, segs_per_row=spr,
-                                 n_slots=p.n_slots)
+                                 n_slots=p.n_slots, recompute=True)
             if static.free_reloc:
                 reloc_cost = jnp.int32(0)
             elif lisa:
@@ -230,7 +529,7 @@ def make_step(static: StaticConfig, geom: DRAMGeometry = GEOM):
             new_open = jnp.where(
                 do_ins, cache_base + ins.slot // spr, target_row)
             touched = fts_lib.touch(fts_b, slot, req.is_write, step_id,
-                                    p.benefit_max)
+                                    p.benefit_max, spr)
             sel3 = lambda h, i, a, b, c: jnp.where(h, a, jnp.where(i, b, c))
             fts_new = jax.tree.map(
                 functools.partial(sel3, hit, do_ins),
@@ -290,33 +589,34 @@ def _scan_one(step, params: MechParams, trace: Trace,
     return cnt
 
 
-def simulate(trace: Trace, static: StaticConfig,
-             params: MechParams) -> Counters:
+def simulate(trace: Trace, static: StaticConfig, params: MechParams,
+             variant: str = "fused") -> Counters:
     """Un-jitted reference: one params point, (T,) or (C, T) trace leaves."""
-    if isinstance(trace.t_issue, jax.core.Tracer):
+    if is_tracer(trace.t_issue):
         # log only when called under a jit trace (== one compilation);
         # eager reference runs must not inflate the jit count
-        _note_trace(f"simulate/{static.mechanism}")
-    step = make_step(static)
+        _note_trace(f"simulate/{static.mechanism}/{variant}")
+    step = make_step(static, variant=variant)
     if trace.t_issue.ndim == 1:
         return _scan_one(step, params, trace, static)
     return jax.vmap(lambda tr: _scan_one(step, params, tr, static))(trace)
 
 
-_simulate_jit = jax.jit(simulate, static_argnums=(1,))
+_simulate_jit = jax.jit(simulate, static_argnums=(1,),
+                        static_argnames=("variant",))
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
+@functools.partial(jax.jit, static_argnums=(1,), static_argnames=("variant",))
 def run_sweep(trace: Trace, static: StaticConfig,
-              params_batch: MechParams) -> Counters:
+              params_batch: MechParams, variant: str = "fused") -> Counters:
     """Run a whole config grid sharing one static structure in ONE program.
 
     ``params_batch`` leaves carry a leading batch axis (P,).  Returns
     ``Counters`` with leading (P,) — or (P, C) for multi-channel traces —
     bitwise-equal to running each params point through ``run_channel``.
     """
-    _note_trace(f"sweep/{static.mechanism}")
-    step = make_step(static)
+    _note_trace(f"sweep/{static.mechanism}/{variant}")
+    step = make_step(static, variant=variant)
     if trace.t_issue.ndim == 1:
         one = lambda p: _scan_one(step, p, trace, static)
     else:

@@ -16,8 +16,9 @@ points, groups them by their ``StaticConfig`` (mechanism/policy + padded FTS
 allocation — capacity and segment-size no longer split groups), and
 dispatches each group as ONE ``dram.run_sweep`` call — a single compiled
 scan vmapped over the stacked dynamic params.  ``sweep_traces`` additionally
-stacks W equal-shape traces along the (independent) channel axis so a whole
-workloads x configs cross product runs per static structure as one program.
+stacks W traces along the (independent) channel axis — unequal lengths are
+no-op-padded (``dram.noop_pad``, DESIGN.md §9) — so a whole workloads x
+configs cross product runs per static structure as one program.
 Post-processing is vectorized over the params axis
 (``_results_from_counters_batch``) so very large grids do not pay a
 Python-side loop for the IPC/energy model.  ``run_single_core`` /
@@ -37,7 +38,8 @@ import numpy as np
 
 from repro.core import dram, traces
 from repro.core.energy import ENERGY
-from repro.core.timing import DDR4, GEOM, DRAMTimings, MechConfig, paper_config
+from repro.core.timing import (DDR4, GEOM, DRAMTimings, MechConfig,
+                               paper_config, shared_static, static_group_key)
 
 CPU_GHZ = 3.2
 CPI_EXEC = 0.4          # 3-wide OoO issue
@@ -143,18 +145,17 @@ def sweep(trace: dram.Trace, cfgs: Sequence[MechConfig],
     """Run an arbitrary config grid with one compiled scan per static
     structure (DESIGN.md §3).
 
-    Configs are grouped by ``cfg.static``; each group's dynamic params are
-    stacked and dispatched as one ``dram.run_sweep`` call, so N configs cost
-    ``len({cfg.static})`` compilations instead of N.  Results come back in
-    input order and are bitwise-identical to per-config ``run_mechanism``.
+    Configs are grouped by ``timing.static_group_key`` and bucketed to the
+    group's tightest shared structure (``timing.shared_static``); each
+    group's dynamic params are stacked and dispatched as one
+    ``dram.run_sweep`` call, so N configs cost one compilation per group
+    instead of N.  Results come back in input order and are
+    bitwise-identical to per-config ``run_mechanism``.
     """
     multi = np.asarray(trace.t_issue).ndim == 2
     n_channels = np.asarray(trace.t_issue).shape[0] if multi else 1
-    groups: Dict[object, List[int]] = {}
-    for i, cfg in enumerate(cfgs):
-        groups.setdefault(cfg.static, []).append(i)
     out: List[RunResult | None] = [None] * len(cfgs)
-    for static, idxs in groups.items():
+    for static, idxs in _static_groups(cfgs).items():
         batch = jax.tree.map(lambda *xs: jnp.stack(xs),
                              *[cfgs[i].params(t) for i in idxs])
         cnts = dram.run_sweep(trace, static, batch)
@@ -165,34 +166,54 @@ def sweep(trace: dram.Trace, cfgs: Sequence[MechConfig],
     return out
 
 
+def _static_groups(cfgs: Sequence[MechConfig]) -> Dict[object, List[int]]:
+    """Group a config grid for batched dispatch: configs sharing a
+    ``static_group_key`` (mechanism/policy/fts_kernel) go to ONE group and
+    the group's shared static is the *tightest* bucket covering its maximum
+    FTS geometry (``timing.shared_static``).  A single-config group — e.g.
+    ``run_single_core``'s one point per mechanism — therefore gets the
+    small 512-slot bucket instead of the 1024-slot sweep ceiling."""
+    keyed: Dict[object, List[int]] = {}
+    for i, cfg in enumerate(cfgs):
+        keyed.setdefault(static_group_key(cfg), []).append(i)
+    return {shared_static([cfgs[i] for i in idxs]): idxs
+            for idxs in keyed.values()}
+
+
 def sweep_traces(trs: Sequence[dram.Trace], cfgs: Sequence[MechConfig],
                  apps_list: Sequence[Sequence[traces.AppParams]],
                  t: DRAMTimings = DDR4) -> List[List[RunResult]]:
-    """Cross-workload batching: W equal-shape traces x N configs in one
-    compiled scan per static structure (ROADMAP: collapse figs 7/8).
+    """Cross-workload batching: W traces x N configs in one compiled scan
+    per static structure (ROADMAP: collapse figs 7/8).
 
     Channels are fully independent in the model (each gets its own scan
     carry), so W workloads stack along the channel axis: (T,) traces stack
     to (W, T), (C, T) traces concatenate to (W*C, T), and the existing
-    ``dram.run_sweep`` channel vmap does the rest.  Returns
-    ``results[w][i]`` for workload ``trs[w]`` under config ``cfgs[i]``,
-    bitwise-equal to per-workload ``sweep`` calls.
+    ``dram.run_sweep`` channel vmap does the rest.  Traces of *unequal
+    length* are right-padded to the longest with no-op requests
+    (``dram.noop_pad``: issue-time ``NOOP_ISSUE``, zero-latency retire, no
+    state or counter effect) — the trace-axis analogue of the padded FTS —
+    so arbitrary workload mixes batch; they must still agree on the channel
+    count.  Returns ``results[w][i]`` for workload ``trs[w]`` under config
+    ``cfgs[i]``, bitwise-equal to per-workload ``sweep`` calls.
     """
     assert len(trs) == len(apps_list) and trs, "one apps tuple per trace"
-    shapes = {np.asarray(tr.t_issue).shape for tr in trs}
-    assert len(shapes) == 1, f"traces must share one shape, got {shapes}"
+    ndims = {np.asarray(tr.t_issue).ndim for tr in trs}
+    assert len(ndims) == 1, f"traces must agree on channel layout: {ndims}"
     multi = np.asarray(trs[0].t_issue).ndim == 2
+    if multi:
+        chans = {np.asarray(tr.t_issue).shape[0] for tr in trs}
+        assert len(chans) == 1, f"traces must share a channel count: {chans}"
     n_channels = np.asarray(trs[0].t_issue).shape[0] if multi else 1
     W = len(trs)
+    t_max = max(np.asarray(tr.t_issue).shape[-1] for tr in trs)
+    trs = [dram.noop_pad(tr, t_max) for tr in trs]
     if multi:
         flat = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *trs)
     else:
         flat = jax.tree.map(lambda *xs: jnp.stack(xs), *trs)
-    groups: Dict[object, List[int]] = {}
-    for i, cfg in enumerate(cfgs):
-        groups.setdefault(cfg.static, []).append(i)
     out: List[List[RunResult | None]] = [[None] * len(cfgs) for _ in range(W)]
-    for static, idxs in groups.items():
+    for static, idxs in _static_groups(cfgs).items():
         batch = jax.tree.map(lambda *xs: jnp.stack(xs),
                              *[cfgs[i].params(t) for i in idxs])
         cnts = dram.run_sweep(flat, static, batch)   # leaves (P, W*C, ...)

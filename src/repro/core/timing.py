@@ -109,21 +109,28 @@ MECHANISMS = ("base", "lisa_villa", "figcache_slow", "figcache_fast",
               "figcache_ideal", "lldram")
 
 
-# Padded FTS allocation buckets (DESIGN.md §3).  Every paper grid fits:
-#   max_slots:        seg_blocks=8 -> 64 cache rows x 16 segs = 1024 slots;
-#                     lisa_villa -> 512 rows x 1 seg = 512 slots.
-#   max_segs_per_row: row_blocks // min paper seg_blocks = 128 // 8 = 16.
-# Keeping one shared bucket is what makes capacity (fig 12) and segment-size
-# (fig 13) sweeps compile exactly once; configs that exceed a bucket round up
-# to the next power of two and get their own static structure.
+# Padded FTS allocation buckets (DESIGN.md §3/§9).  A two-rung ladder:
+#   SMALL_*  — covers every default §8 configuration (512 slots = 64 cache
+#              rows x 8 segs; lisa_villa's 512 rows x 1 seg; spr <= 8), so
+#              single-config runs do not pay 1024-wide reductions for a
+#              512-slot config;
+#   DEFAULT_* — the sweep-grid ceiling: seg_blocks=8 -> 64 x 16 = 1024
+#              slots, segs_per_row up to 128 // 8 = 16 (fig 13's grid).
+# ``shared_static`` buckets a whole config GRID to one shared structure
+# (the tightest rung covering its maximum), which is what keeps capacity
+# (fig 12) and segment-size (fig 13) sweeps compiling exactly once; configs
+# that exceed a bucket round up to the next power of two and get their own
+# static structure.
+SMALL_MAX_SLOTS = 512
+SMALL_MAX_SEGS_PER_ROW = 8
 DEFAULT_MAX_SLOTS = 1024
 DEFAULT_MAX_SEGS_PER_ROW = 16
 
 
-def _pad_bucket(n: int, default: int) -> int:
-    if n <= default:
-        return default
-    p = default
+def _pad_bucket(n: int, floor: int) -> int:
+    if n <= floor:
+        return floor
+    p = floor
     while p < n:
         p <<= 1
     return p
@@ -144,6 +151,10 @@ class StaticConfig:
     max_slots: int
     max_segs_per_row: int
     policy: str
+    # route the tag compare + victim argmin through the fused Pallas
+    # ``kernels/fts_lookup`` op (DESIGN.md §9); a trace-time branch, so it
+    # lives in the static half.  Off-TPU it falls back to the pure-JAX ref.
+    fts_kernel: bool = False
 
     @property
     def has_cache(self) -> bool:
@@ -194,6 +205,7 @@ class MechConfig:
     policy: str = "row_benefit"    # row_benefit|segment_benefit|lru|random
     insert_threshold: int = 1      # consecutive misses before insertion
     benefit_bits: int = 5
+    fts_kernel: bool = False       # fuse lookup+victim via kernels/fts_lookup
 
     def __post_init__(self):
         assert self.mechanism in MECHANISMS, self.mechanism
@@ -223,16 +235,20 @@ class MechConfig:
 
     @property
     def static(self) -> StaticConfig:
-        """Padded static structure: capacity/segment-size grids that fit the
-        default buckets all map to the SAME value (one compiled scan)."""
+        """Padded static structure for a config evaluated ON ITS OWN: the
+        tightest bucket rung covering this config (a default 512-slot
+        config no longer pays the 1024-slot sweep ceiling).  Grids that mix
+        shapes must share one structure via ``shared_static``."""
         if not self.has_cache:
-            return StaticConfig(self.mechanism, 1, 1, self.policy)
+            return StaticConfig(self.mechanism, 1, 1, self.policy,
+                                self.fts_kernel)
         return StaticConfig(
             mechanism=self.mechanism,
-            max_slots=_pad_bucket(self.n_slots, DEFAULT_MAX_SLOTS),
+            max_slots=_pad_bucket(self.n_slots, SMALL_MAX_SLOTS),
             max_segs_per_row=_pad_bucket(self.segs_per_row,
-                                         DEFAULT_MAX_SEGS_PER_ROW),
+                                         SMALL_MAX_SEGS_PER_ROW),
             policy=self.policy,
+            fts_kernel=self.fts_kernel,
         )
 
     @property
@@ -244,6 +260,7 @@ class MechConfig:
             max_slots=self.n_slots if self.has_cache else 1,
             max_segs_per_row=self.segs_per_row if self.has_cache else 1,
             policy=self.policy,
+            fts_kernel=self.fts_kernel,
         )
 
     def params(self, t: DRAMTimings = DDR4) -> MechParams:
@@ -258,6 +275,36 @@ class MechConfig:
             n_slots=i32(self.n_slots if self.has_cache else 1),
             segs_per_row=i32(self.segs_per_row if self.has_cache else 1),
         )
+
+
+def static_group_key(cfg: MechConfig):
+    """The non-shape half of a static structure.  Configs sharing this key
+    can always share ONE compiled scan via ``shared_static`` — capacity and
+    segment-size variation never splits a group."""
+    return (cfg.mechanism, cfg.policy, cfg.fts_kernel, cfg.has_cache)
+
+
+def shared_static(cfgs) -> StaticConfig:
+    """One static structure covering a whole config grid: the tightest
+    bucket rung holding the grid's maximum ``n_slots`` / ``segs_per_row``.
+    All configs must agree on ``static_group_key`` (mechanism / policy /
+    fts_kernel) — that is the grouping ``simulator.sweep`` performs."""
+    cfgs = list(cfgs)
+    key = static_group_key(cfgs[0])
+    assert all(static_group_key(c) == key for c in cfgs), \
+        "a shared static needs one mechanism/policy/fts_kernel"
+    c0 = cfgs[0]
+    if not c0.has_cache:
+        return StaticConfig(c0.mechanism, 1, 1, c0.policy, c0.fts_kernel)
+    return StaticConfig(
+        mechanism=c0.mechanism,
+        max_slots=_pad_bucket(max(c.n_slots for c in cfgs),
+                              SMALL_MAX_SLOTS),
+        max_segs_per_row=_pad_bucket(max(c.segs_per_row for c in cfgs),
+                                     SMALL_MAX_SEGS_PER_ROW),
+        policy=c0.policy,
+        fts_kernel=c0.fts_kernel,
+    )
 
 
 def paper_config(mechanism: str, **kw) -> MechConfig:

@@ -59,7 +59,8 @@ def embed_cache_lookup(cache: EmbedCache, table: jax.Array,
     for i in range(min(T, 64)):     # bounded unroll for big batches
         fts = jax.lax.cond(
             hit[i], lambda f: fts_lib.touch(f, slot[i], jnp.bool_(False),
-                                            jnp.int32(step), bmax),
+                                            jnp.int32(step), bmax,
+                                            fig.segs_per_row),
             lambda f: f, fts)
     missed = jnp.where(hit, -1, segs)
     any_miss = jnp.any(missed >= 0)

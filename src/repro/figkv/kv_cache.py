@@ -118,7 +118,8 @@ def _fts_step(fts_b, segs, step, fig: FIGKVConfig):
         fts_b = jax.lax.cond(
             hits[i],
             lambda f: fts_lib.touch(f, slots[i], jnp.bool_(False), step,
-                                    (1 << fig.benefit_bits) - 1),
+                                    (1 << fig.benefit_bits) - 1,
+                                    fig.segs_per_row),
             lambda f: f, fts_b)
     # insert-any-miss: the top-scoring miss is relocated this step
     miss_order = jnp.argmax(~hits)          # segs sorted by score already

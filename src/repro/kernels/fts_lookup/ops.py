@@ -1,0 +1,40 @@
+"""Dispatch wrapper for the fused FTS lookup: kernel on TPU, ref elsewhere.
+
+Called from inside the jitted simulator scan (``dram.make_step`` with
+``StaticConfig.fts_kernel``), so the backend choice is made at trace time:
+on TPU the Pallas kernel runs one VMEM pass over the selected bank row; on
+CPU/GPU CI the bit-exact pure-JAX ref keeps the scan compiling and the
+results bitwise-identical to the non-kernel path (``tests/test_hotloop.py``
+asserts this).  ``interpret=True`` forces the kernel through the Pallas
+interpreter for kernel-vs-ref validation off-TPU (``tests/test_kernels.py``).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fts_lookup.fts_lookup import fts_lookup
+from repro.kernels.fts_lookup.ref import fts_lookup_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fts_lookup_op(tags: jax.Array, score: jax.Array, bank: jax.Array,
+                  seg: jax.Array, limit: jax.Array, *,
+                  interpret: bool = False
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (hit: bool, hit_slot: int32, victim_cand: int32).
+
+    tags/score (n_banks, max_slots) int32; scalars select the bank row, the
+    looked-up segment id and the active-prefix length of the victim argmin.
+    """
+    if _on_tpu() or interpret:
+        out = fts_lookup(tags, score, bank, seg, limit,
+                         interpret=interpret or not _on_tpu())
+    else:
+        out = fts_lookup_ref(tags, score, bank, seg, limit)
+    return out[0] != 0, out[1], out[2]

@@ -1,0 +1,25 @@
+"""Pure-JAX oracle for the fused FTS lookup kernel (bit-exact)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BIG = jnp.int32(1 << 30)
+
+
+def fts_lookup_ref(tags: jax.Array, score: jax.Array, bank: jax.Array,
+                   seg: jax.Array, limit: jax.Array) -> jax.Array:
+    """Same contract as ``fts_lookup.fts_lookup`` (see its docstring):
+    (3,) int32 [hit, hit_slot, victim_cand] for the selected bank row."""
+    tags_b = tags[bank]
+    score_b = score[bank]
+    s = tags_b.shape[0]
+    idx = jnp.arange(s, dtype=jnp.int32)
+    m = tags_b == seg
+    hit = jnp.any(m)
+    hit_slot = jnp.min(jnp.where(m, idx, s))
+    masked = jnp.where(idx < limit, score_b, BIG)
+    mn = jnp.min(masked)
+    cand = jnp.min(jnp.where(masked == mn, idx, s - 1))
+    return jnp.stack([hit.astype(jnp.int32), hit_slot.astype(jnp.int32),
+                      cand.astype(jnp.int32)])

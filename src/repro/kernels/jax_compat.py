@@ -1,0 +1,22 @@
+"""Version shims for non-Pallas jax internals the simulator touches.
+
+``jax.core.Tracer`` is the 0.4.x spelling; newer jax moves it to
+``jax.extend.core`` and deprecates the old path.  ``core/dram.py`` needs it
+only to ask "am I being traced right now?" (its jit-compilation telemetry),
+so the shim exports a single ``is_tracer`` predicate and both CI dep
+configurations resolve whichever location their jax provides.  Sibling of
+``pallas_compat.py``, which shims the Pallas TPU API the same way.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5: the public extension point
+    from jax.extend.core import Tracer  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x
+    Tracer = jax.core.Tracer
+
+
+def is_tracer(x) -> bool:
+    """True when ``x`` is an abstract tracer (i.e. we are inside a trace)."""
+    return isinstance(x, Tracer)

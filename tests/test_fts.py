@@ -42,7 +42,8 @@ def test_row_benefit_evicts_lowest_benefit_row():
     for s in range(SPR, SLOTS):
         hit, slot = fts_lib.lookup(fts, jnp.int32(s))
         for _ in range(5):
-            fts = fts_lib.touch(fts, slot, jnp.bool_(False), jnp.int32(1), 31)
+            fts = fts_lib.touch(fts, slot, jnp.bool_(False), jnp.int32(1), 31,
+                                SPR)
     res = _insert(fts, 999)
     assert int(res.slot) // SPR == 0      # victim from row 0
     assert bool(res.evicted_valid)
@@ -54,7 +55,8 @@ def test_row_benefit_bitvector_refills_whole_row():
         fts = _insert(fts, s).fts
     for s in range(SPR, SLOTS):
         hit, slot = fts_lib.lookup(fts, jnp.int32(s))
-        fts = fts_lib.touch(fts, slot, jnp.bool_(False), jnp.int32(1), 31)
+        fts = fts_lib.touch(fts, slot, jnp.bool_(False), jnp.int32(1), 31,
+                                SPR)
     rows = set()
     for i in range(SPR):                  # next SPR inserts land in one row
         res = _insert(fts, 1000 + i)
@@ -69,7 +71,8 @@ def test_dirty_eviction_reports_writeback():
         r = _insert(fts, s)
         fts = r.fts
     hit, slot = fts_lib.lookup(fts, jnp.int32(2))
-    fts = fts_lib.touch(fts, slot, jnp.bool_(True), jnp.int32(0), 31)  # dirty
+    fts = fts_lib.touch(fts, slot, jnp.bool_(True), jnp.int32(0), 31,
+                        SPR)  # dirty
     # evict everything; exactly one eviction must flag dirty with tag 2
     dirty_tags = []
     for i in range(SPR):
@@ -105,7 +108,7 @@ def test_fts_invariants_under_random_workload(segs, policy):
         hit, slot = fts_lib.lookup(fts, jnp.int32(s))
         if bool(hit):
             fts = fts_lib.touch(fts, slot, jnp.bool_(False),
-                                jnp.int32(step), 31)
+                                jnp.int32(step), 31, SPR)
         else:
             res = fts_lib.insert(fts, jnp.int32(s), jnp.bool_(False),
                                  jnp.int32(step), policy=policy,

@@ -11,6 +11,8 @@ from repro.kernels.figaro_reloc.figaro_reloc import reloc
 from repro.kernels.figaro_reloc.ref import reloc_ref
 from repro.kernels.figcache_decode.figcache_decode import figcache_decode
 from repro.kernels.figcache_decode.ref import figcache_decode_ref
+from repro.kernels.fts_lookup.fts_lookup import fts_lookup
+from repro.kernels.fts_lookup.ref import fts_lookup_ref
 
 
 # ---------------- flash attention ----------------
@@ -67,6 +69,47 @@ def test_reloc_dtypes(dtype):
     np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(pool[3]))
     np.testing.assert_array_equal(np.asarray(out[5]), np.asarray(pool[11]))
     np.testing.assert_array_equal(np.asarray(out[1]), 0)
+
+
+# ---------------- fts lookup (fused tag compare + victim argmin) ----------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(5, 9), st.integers(-1, 40),
+       st.integers(0, 2))
+def test_fts_lookup_property(n_banks, slots_pow, seg, limit_kind):
+    """Kernel (interpret) vs pure-JAX ref: hit bit, first-match slot and
+    first-min victim candidate agree over random tag stores, including the
+    all-miss, all-masked (limit=0) and duplicate-minimum corners."""
+    S = 2 ** slots_pow
+    rng = np.random.default_rng(n_banks * 1000 + S + seg)
+    tags = rng.integers(-1, 40, (n_banks, S)).astype(np.int32)
+    score = rng.integers(0, 8, (n_banks, S)).astype(np.int32)  # many ties
+    bank = np.int32(rng.integers(0, n_banks))
+    limit = np.int32([0, S // 2, S][limit_kind])
+    args = (jnp.asarray(tags), jnp.asarray(score), jnp.int32(bank),
+            jnp.int32(max(seg, 0)), jnp.int32(limit))
+    out = fts_lookup(*args, interpret=True)
+    ref = fts_lookup_ref(*args)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_fts_lookup_matches_unfused_semantics():
+    """The fused op must agree with the plain jnp formulation the simulator
+    uses on the non-kernel path: argmax tag match + BIG-masked argmin."""
+    tags = jnp.asarray([[3, -1, 7, 3], [9, 9, -1, 0]], jnp.int32)
+    score = jnp.asarray([[5, 1, 1, 2], [4, 4, 4, 4]], jnp.int32)
+    for bank, seg, limit in [(0, 3, 4), (0, 8, 4), (0, 7, 2), (1, 9, 3),
+                             (1, 0, 0)]:
+        out = np.asarray(fts_lookup(tags, score, jnp.int32(bank),
+                                    jnp.int32(seg), jnp.int32(limit),
+                                    interpret=True))
+        m = np.asarray(tags[bank]) == seg
+        assert bool(out[0]) == bool(m.any())
+        if m.any():
+            assert out[1] == int(np.argmax(m))
+        idx = np.arange(4)
+        masked = np.where(idx < limit, np.asarray(score[bank]), 1 << 30)
+        assert out[2] == int(np.argmin(masked))
 
 
 # ---------------- figcache decode ----------------

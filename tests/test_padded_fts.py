@@ -18,7 +18,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import dram, traces
 from repro.core import fts as fts_lib
-from repro.core.timing import paper_config
+from repro.core.timing import paper_config, shared_static
 
 POLICIES = ("row_benefit", "segment_benefit", "lru", "random")
 
@@ -36,7 +36,7 @@ def _replay(segs, policy, threshold, max_slots, max_segs, n_slots, spr):
         hit, slot = fts_lib.lookup(fts, jnp.int32(s))
         if bool(hit):
             fts = fts_lib.touch(fts, slot, jnp.bool_(step % 3 == 0),
-                                jnp.int32(step), 31)
+                                jnp.int32(step), 31, spr)
             log.append(("hit", int(slot)))
         else:
             want, fts = fts_lib.should_insert(fts, jnp.int32(s), threshold)
@@ -117,8 +117,9 @@ def _assert_counters_equal(ref, got, ctx):
 @pytest.mark.parametrize("policy", ["row_benefit", "segment_benefit"])
 @pytest.mark.parametrize("threshold", [1, 2, 4])
 def test_padded_scan_matches_unpadded_scan(policy, threshold):
-    """run_channel (padded to max_slots=1024) vs run_channel_exact (FTS of
-    exactly n_slots): identical counters across policies and thresholds."""
+    """run_channel (padded to the bucketed max_slots) vs run_channel_exact
+    (FTS of exactly n_slots): identical counters across policies and
+    thresholds."""
     tr = _bank_hammer_trace()
     cfg = paper_config("figcache_fast", cache_rows=2, policy=policy,
                        insert_threshold=threshold)
@@ -138,8 +139,7 @@ def test_capacity_and_segment_grids_compile_once():
                     for sb in (8, 16, 64)],
     }
     for label, cfgs in grids.items():
-        static = cfgs[0].static
-        assert all(c.static == static for c in cfgs), label
+        static = shared_static(cfgs)
         batch = jax.tree.map(lambda *xs: jnp.stack(xs),
                              *[c.params() for c in cfgs])
         j0 = dram.jit_trace_count()
