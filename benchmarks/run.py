@@ -22,8 +22,8 @@ def main(argv=None) -> None:
     from benchmarks import (common, fig07_single_core, fig08_eight_core,
                             fig09_cache_hit, fig10_row_hit, fig11_energy,
                             fig12_capacity, fig13_segment_size,
-                            fig14_replacement, fig15_insertion, overhead,
-                            sweep_engine)
+                            fig14_replacement, fig15_insertion,
+                            fig16_scheduler, overhead, sweep_engine)
 
     if args.quick:
         common.set_quick()
@@ -44,10 +44,13 @@ def main(argv=None) -> None:
         ("fig14_replacement", fig14_replacement,
          lambda s: s.get("row_benefit")),
         ("fig15_insertion", fig15_insertion, lambda s: s.get("th=1")),
+        ("fig16_scheduler", fig16_scheduler,
+         lambda s: s.get("frfcfs_qd16")),
         ("sweep_engine", sweep_engine,
          lambda s: (f"jits {s['jits_before']}->{s['jits_after']} "
                     f"cap={s['jits_capacity']} seg={s['jits_segment']} "
-                    f"hotloop={s['hotloop_speedup']}x")),
+                    f"hotloop={s['hotloop_speedup']}x "
+                    f"wavefront={s['wavefront_speedup']}x")),
         ("overhead_table", overhead,
          lambda s: s.get("fts_kB_per_channel")),
     ]

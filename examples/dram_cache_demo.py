@@ -2,11 +2,18 @@
 up, segments co-locate, and the row-buffer hit rate climb.
 
     PYTHONPATH=src python examples/dram_cache_demo.py
+
+``REPRO_EXAMPLE_REQS`` shrinks the simulated trace (the CI smoke test in
+``tests/test_examples.py`` runs this file with a tiny value).
 """
+import os
+
 import numpy as np
 
 from repro.core import simulator, traces
 from repro.core.timing import DDR4, paper_config
+
+N_REQS = int(os.environ.get("REPRO_EXAMPLE_REQS", "8192"))
 
 
 def main():
@@ -20,7 +27,7 @@ def main():
           f"{DDR4.tRAS*DDR4.fast_tRAS_scale:.2f} ns")
 
     print("\n=== one intensive app through all six systems (paper §8) ===")
-    res = simulator.run_single_core("libquantum", n_reqs=8192)
+    res = simulator.run_single_core("libquantum", n_reqs=N_REQS)
     base = res["base"]
     print(f"{'mechanism':16s} {'speedup':>8s} {'row-hit':>8s} "
           f"{'cache-hit':>9s} {'DRAM mJ':>8s}")

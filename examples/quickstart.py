@@ -5,15 +5,23 @@
 3. A model from the arch pool doing a forward + a decode step.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+``REPRO_EXAMPLE_REQS`` shrinks the simulated trace (the CI smoke test in
+``tests/test_examples.py`` runs this file with a tiny value).
 """
+import os
+
 import jax
 import jax.numpy as jnp
+
+N_REQS = int(os.environ.get("REPRO_EXAMPLE_REQS", "6144"))
 
 # --- 1. paper reproduction: FIGCache vs Base on an intensive app ----------
 from repro.core import simulator
 
 res = simulator.run_single_core(
-    "mcf", mechanisms=("base", "figcache_fast", "lisa_villa"), n_reqs=6144)
+    "mcf", mechanisms=("base", "figcache_fast", "lisa_villa"),
+    n_reqs=N_REQS)
 s = simulator.speedup_summary(res)
 print(f"[1] mcf speedup: FIGCache-Fast {s['figcache_fast']:.3f}x "
       f"(LISA-VILLA {s['lisa_villa']:.3f}x)  "

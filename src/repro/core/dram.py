@@ -12,8 +12,12 @@ by ``core/fts.py``.
 
 Modeling abstractions (documented in DESIGN.md §7):
  * per-bank in-order service with bank-level parallelism (a request waits only
-   on its own bank) — FR-FCFS's row-hit-first effect is largely captured
-   because traces preserve row-visit runs;
+   on its own bank); the *service order itself* is a first-class knob since
+   PR 4 — ``core/sched/policies.py`` (DESIGN.md §10) reorders the trace
+   under FCFS / FR-FCFS / write-drain controllers before this scan runs,
+   and ``core/sched/wavefront.py`` retires whole distinct-bank waves per
+   scan step using the same per-request decision function
+   (``make_decision_fn``);
  * the processor is represented by the trace arrival times + an
    MLP-weighted latency→CPI conversion in ``simulator.py``.
 
@@ -55,7 +59,12 @@ from repro.kernels.jax_compat import is_tracer
 
 
 class Trace(NamedTuple):
-    """Per-channel request stream, already sorted by t_issue.
+    """Per-channel request stream in SERVICE order.
+
+    Generators emit traces sorted by ``t_issue`` (FCFS); a memory
+    controller (``core/sched/policies.py``, DESIGN.md §10) may reorder
+    them, after which ``t_issue`` is non-monotone — each request still
+    waits for its own arrival (``t_ready = max(t_issue, ...)``).
 
     Shapes: single channel (T,), multi-channel (C, T).
     """
@@ -171,27 +180,57 @@ def _lisa_hops(row: jax.Array, geom: DRAMGeometry) -> jax.Array:
     return jnp.minimum(m, 4 - m)
 
 
-def make_step(static: StaticConfig, geom: DRAMGeometry = GEOM,
-              variant: str = "fused"):
-    """Build the scan body for one *static structure*.
+class Decision(NamedTuple):
+    """The bank-local half of one fused step (DESIGN.md §9/§10).
 
-    The returned ``step(params, carry, req)`` closes over the padded FTS
-    allocation and trace-time branches only; every numeric knob — the DRAM
-    timings AND the effective FTS geometry ``n_slots``/``segs_per_row`` —
-    comes in through the traced ``params`` (``timing.MechParams``), so one
-    compilation of the scan serves arbitrarily many configs sharing
-    ``static``, capacity and segment-size sweeps included (DESIGN.md §3).
+    Everything a request's outcome needs that depends only on *its own
+    bank's* state (FTS decision + write-back values, row-buffer outcome,
+    relocation cost) — and NOT on the channel-shared bus/MSHR timing.
+    ``dram.make_step`` ("fused") computes a Decision and then resolves the
+    shared timing serially; the bank-wavefront scan
+    (``core/sched/wavefront.py``) vmaps the SAME decision function across a
+    wave of distinct-bank requests and resolves the shared timing with a
+    short in-wave ordered prefix.  That shared code path is what makes the
+    two executions bitwise-equal by construction.
 
-    ``variant="fused"`` (default) is the surgical O(1)-update hot loop —
-    carried FTS aggregates, per-(bank, slot) scalar scatters, no-op-request
-    support, optional Pallas lookup.  ``variant="dense"`` is the pre-
-    aggregate reference body (whole-FTS gathers / tree selects / full
-    write-backs, no no-op support): bitwise-identical on real requests,
-    kept as the equivalence bar and benchmark baseline (DESIGN.md §9).
+    All fields are no-op-safe: for a padding request (``t_issue >=
+    NOOP_ISSUE``) every write value equals the old state and every counter
+    delta is zero.
     """
-    if variant == "dense":
-        return _make_step_dense(static, geom)
-    assert variant == "fused", variant
+    write: fts_lib.SlotWrite  # per-(bank, slot) FTS write-back values
+    hit: jax.Array            # cache hit (cacheable & real)
+    row_hit: jax.Array        # open-row hit on the (possibly cached) target
+    served_fast: jax.Array    # served from fast-subarray timings
+    pre_act: jax.Array        # ACT(+PRE) latency before the CAS
+    reloc_cost: jax.Array     # insertion relocation ticks (0 if no insert)
+    new_open: jax.Array       # row left open in the bank afterwards
+    moved: jax.Array          # blocks relocated into the cache
+    wb: jax.Array             # dirty-victim writeback blocks
+    n_ins: jax.Array          # 1 if an insertion happened
+
+
+def _placeholder_write(max_segs: int) -> fts_lib.SlotWrite:
+    """A shape-consistent ``SlotWrite`` for cache-less mechanisms (never
+    applied — ``has_cache`` gates ``fts_lib.apply_write``)."""
+    z = jnp.int32(0)
+    return fts_lib.SlotWrite(
+        w=z, tag=z, valid=jnp.bool_(False), dirty=jnp.bool_(False),
+        benefit=z, last_use=z, row_delta=z, evict_row=z,
+        evict_mask=jnp.zeros((max_segs,), bool), tr_idx=z, miss_tag=z,
+        miss_cnt=z, n_valid_inc=z)
+
+
+def make_decision_fn(static: StaticConfig, geom: DRAMGeometry = GEOM):
+    """Build the per-request decision function of the fused hot loop.
+
+    ``decide(params, state, req, step_id) -> Decision`` reads only the
+    request's own bank (scalar/one-row gathers from the banked state), so
+    it can be ``jax.vmap``-ed over a wave of requests to *distinct* banks
+    unchanged — the wavefront scan does exactly that (DESIGN.md §10).
+    ``step_id`` is the number of real requests retired before this one
+    (== ``cnt.reads + cnt.writes`` serially; wave callers add the in-wave
+    prefix count), which feeds LRU stamps and the Random victim hash.
+    """
     cache_base = jnp.int32(geom.n_rows)           # id-space for cache rows
     reserved_sub = geom.n_subarrays - 1           # figcache_slow region
     lisa = static.mechanism == "lisa_villa"
@@ -200,22 +239,14 @@ def make_step(static: StaticConfig, geom: DRAMGeometry = GEOM,
     max_slots = static.max_slots if static.has_cache else 1
     max_segs = static.max_segs_per_row if static.has_cache else 1
 
-    def step(params: MechParams, carry, req):
-        state, cnt = carry
+    def decide(params: MechParams, state: "BankState", req: Trace,
+               step_id) -> Decision:
         p = params
         spr = p.segs_per_row            # traced — rides in MechParams
         bank = req.bank
-        core = req.core
         f = state.fts
         real = req.t_issue < NOOP_ISSUE
-        # closed loop: a core may not have more than N_MSHR requests in
-        # flight — it stalls until the request N_MSHR-ago completed
-        mshr_slot = state.mshr_idx[core]
-        mshr_free = state.mshr_ring[core, mshr_slot]
-        t_ready = jnp.maximum(req.t_issue, mshr_free)
-        t0 = jnp.maximum(t_ready, state.busy[bank])
         open_b = state.open_row[bank]
-        step_id = cnt.reads + cnt.writes
 
         # ---- cache lookup + victim candidate (one pass over the bank) ----
         if static.has_cache:
@@ -315,48 +346,38 @@ def make_step(static: StaticConfig, geom: DRAMGeometry = GEOM,
             else:
                 new_evict_row = f.evict_row[bank]
                 new_evict_mask = f.evict_mask[bank]
-            new_fts = f._replace(
-                tags=f.tags.at[bank, w].set(jnp.where(do_ins, seg, old_tag)),
-                valid=f.valid.at[bank, w].set(old_valid | do_ins),
-                dirty=f.dirty.at[bank, w].set(
-                    jnp.where(do_ins, req.is_write,
-                              old_dirty | (hit & req.is_write))),
-                benefit=f.benefit.at[bank, w].set(new_benefit),
-                last_use=f.last_use.at[bank, w].set(
-                    jnp.where(hit | do_ins, step_id, old_last)),
-                row_sum=f.row_sum.at[bank, w // spr].add(
-                    new_benefit - old_benefit),
-                evict_row=f.evict_row.at[bank].set(new_evict_row),
-                evict_mask=f.evict_mask.at[bank].set(new_evict_mask),
-                miss_tags=f.miss_tags.at[bank, tr_idx].set(
-                    jnp.where(advance, seg, f.miss_tags[bank, tr_idx])),
-                miss_cnt=f.miss_cnt.at[bank, tr_idx].set(
-                    jnp.where(advance, cnt_new, f.miss_cnt[bank, tr_idx])),
-                n_valid=f.n_valid.at[bank].add(
-                    (do_ins & has_free).astype(jnp.int32)),
+            write = fts_lib.SlotWrite(
+                w=w,
+                tag=jnp.where(do_ins, seg, old_tag),
+                valid=old_valid | do_ins,
+                dirty=jnp.where(do_ins, req.is_write,
+                                old_dirty | (hit & req.is_write)),
+                benefit=new_benefit,
+                last_use=jnp.where(hit | do_ins, step_id, old_last),
+                row_delta=new_benefit - old_benefit,
+                evict_row=new_evict_row,
+                evict_mask=new_evict_mask,
+                tr_idx=tr_idx,
+                miss_tag=jnp.where(advance, seg, f.miss_tags[bank, tr_idx]),
+                miss_cnt=jnp.where(advance, cnt_new, f.miss_cnt[bank, tr_idx]),
+                n_valid_inc=(do_ins & has_free).astype(jnp.int32),
             )
         else:
             seg = jnp.int32(0)
             hit, slot = jnp.bool_(False), jnp.int32(0)
             do_ins = ev_valid = ev_dirty = jnp.bool_(False)
             ev_tag = ins_slot = jnp.int32(0)
-            new_fts = state.fts
+            write = _placeholder_write(max_segs)
 
         target_row = jnp.where(hit, cache_base + slot // spr, req.row)
 
-        # ---- service latency ---------------------------------------------
+        # ---- service latency (bank-local half) ----------------------------
         served_fast = (hit & static.fast_cache) | lldram
         rcd = jnp.where(served_fast, p.rcd_fast, p.rcd)
         rp = jnp.where(served_fast, p.rp_fast, p.rp)
         row_hit = open_b == target_row
         closed = open_b < 0
         pre_act = jnp.where(row_hit, 0, rcd + jnp.where(closed, 0, rp))
-        # the 64 B burst serializes on the shared channel data bus — a
-        # contention source no in-DRAM cache can relieve
-        done = jnp.maximum(t0 + pre_act + p.cas, state.bus_free) + p.bl
-        # bank occupancy: column accesses pipeline at tCCD; an ACT(+PRE)
-        # occupies the bank for its own duration before the CAS can pipeline
-        serv_end = t0 + pre_act + p.ccd
 
         # ---- relocation cost (miss-path insertion) ------------------------
         if static.has_cache:
@@ -391,11 +412,74 @@ def make_step(static: StaticConfig, geom: DRAMGeometry = GEOM,
             new_open = target_row
             moved = wb = n_ins = jnp.int32(0)
 
+        return Decision(write=write, hit=hit, row_hit=row_hit,
+                        served_fast=served_fast, pre_act=pre_act,
+                        reloc_cost=reloc_cost, new_open=new_open,
+                        moved=moved, wb=wb, n_ins=n_ins)
+
+    return decide
+
+
+def make_step(static: StaticConfig, geom: DRAMGeometry = GEOM,
+              variant: str = "fused"):
+    """Build the scan body for one *static structure*.
+
+    The returned ``step(params, carry, req)`` closes over the padded FTS
+    allocation and trace-time branches only; every numeric knob — the DRAM
+    timings AND the effective FTS geometry ``n_slots``/``segs_per_row`` —
+    comes in through the traced ``params`` (``timing.MechParams``), so one
+    compilation of the scan serves arbitrarily many configs sharing
+    ``static``, capacity and segment-size sweeps included (DESIGN.md §3).
+
+    ``variant="fused"`` (default) is the surgical O(1)-update hot loop —
+    carried FTS aggregates, per-(bank, slot) scalar scatters, no-op-request
+    support, optional Pallas lookup — structured as the shared per-request
+    ``make_decision_fn`` (the bank-local half, also vmapped by the
+    wavefront scan of ``core/sched/wavefront.py``) plus the serial
+    bus/MSHR timing resolution below.  ``variant="dense"`` is the pre-
+    aggregate reference body (whole-FTS gathers / tree selects / full
+    write-backs, no no-op support): bitwise-identical on real requests,
+    kept as the equivalence bar and benchmark baseline (DESIGN.md §9).
+    """
+    if variant == "dense":
+        return _make_step_dense(static, geom)
+    assert variant == "fused", variant
+    decide = make_decision_fn(static, geom)
+
+    def step(params: MechParams, carry, req):
+        state, cnt = carry
+        p = params
+        bank = req.bank
+        core = req.core
+        real = req.t_issue < NOOP_ISSUE
+        step_id = cnt.reads + cnt.writes
+        dec = decide(params, state, req, step_id)
+
+        # ---- channel-shared timing: MSHR closed loop + data bus -----------
+        # a core may not have more than N_MSHR requests in flight — it
+        # stalls until the request N_MSHR-ago completed
+        mshr_slot = state.mshr_idx[core]
+        mshr_free = state.mshr_ring[core, mshr_slot]
+        t_ready = jnp.maximum(req.t_issue, mshr_free)
+        t0 = jnp.maximum(t_ready, state.busy[bank])
+        # the 64 B burst serializes on the shared channel data bus — a
+        # contention source no in-DRAM cache can relieve
+        done = jnp.maximum(t0 + dec.pre_act + p.cas, state.bus_free) + p.bl
+        # bank occupancy: column accesses pipeline at tCCD; an ACT(+PRE)
+        # occupies the bank for its own duration before the CAS can pipeline
+        serv_end = t0 + dec.pre_act + p.ccd
+
+        if static.has_cache:
+            new_fts = fts_lib.apply_write(state.fts, bank, p.segs_per_row,
+                                          dec.write)
+        else:
+            new_fts = state.fts
         state = BankState(
             open_row=state.open_row.at[bank].set(
-                jnp.where(real, new_open, open_b)),
+                jnp.where(real, dec.new_open, state.open_row[bank])),
             busy=state.busy.at[bank].set(
-                jnp.where(real, serv_end + reloc_cost, state.busy[bank])),
+                jnp.where(real, serv_end + dec.reloc_cost,
+                          state.busy[bank])),
             fts=new_fts,
             mshr_ring=state.mshr_ring.at[core, mshr_slot].set(
                 jnp.where(real, done, mshr_free)),
@@ -405,18 +489,18 @@ def make_step(static: StaticConfig, geom: DRAMGeometry = GEOM,
         )
 
         # ---- counters ------------------------------------------------------
-        act = ((~row_hit) & real).astype(jnp.int32)
+        act = ((~dec.row_hit) & real).astype(jnp.int32)
         lat_ns = ((done - t_ready) // 8).astype(jnp.int32)
         cnt = Counters(
-            acts_slow=cnt.acts_slow + act * (~served_fast),
-            acts_fast=cnt.acts_fast + act * served_fast,
+            acts_slow=cnt.acts_slow + act * (~dec.served_fast),
+            acts_fast=cnt.acts_fast + act * dec.served_fast,
             reads=cnt.reads + ((~req.is_write) & real).astype(jnp.int32),
             writes=cnt.writes + (req.is_write & real).astype(jnp.int32),
-            reloc_blocks=cnt.reloc_blocks + moved,
-            wb_blocks=cnt.wb_blocks + wb,
-            row_hits=cnt.row_hits + (row_hit & real).astype(jnp.int32),
-            cache_hits=cnt.cache_hits + hit.astype(jnp.int32),
-            insertions=cnt.insertions + n_ins,
+            reloc_blocks=cnt.reloc_blocks + dec.moved,
+            wb_blocks=cnt.wb_blocks + dec.wb,
+            row_hits=cnt.row_hits + (dec.row_hit & real).astype(jnp.int32),
+            cache_hits=cnt.cache_hits + dec.hit.astype(jnp.int32),
+            insertions=cnt.insertions + dec.n_ins,
             lat_sum_ns=cnt.lat_sum_ns.at[core].add(
                 jnp.where(real, lat_ns, 0)),
             req_cnt=cnt.req_cnt.at[core].add(real.astype(jnp.int32)),
@@ -424,7 +508,7 @@ def make_step(static: StaticConfig, geom: DRAMGeometry = GEOM,
             # data bus, which can outlast the bank's own serv_end+reloc —
             # take the max over *both* (execution time feeds core/energy.py)
             t_end=jnp.maximum(cnt.t_end, jnp.where(
-                real, jnp.maximum(done, serv_end + reloc_cost), 0)),
+                real, jnp.maximum(done, serv_end + dec.reloc_cost), 0)),
         )
         return (state, cnt), None
 

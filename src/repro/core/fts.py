@@ -378,6 +378,58 @@ def insert(fts: FTS, seg: jax.Array, is_write: jax.Array, step: jax.Array,
     return InsertResult(fts, slot, ev_valid, ev_dirty, ev_tag)
 
 
+class SlotWrite(NamedTuple):
+    """The surgical per-(bank, slot) FTS write-back of one simulator step
+    (DESIGN.md §9/§10): exactly one slot ``w`` per bank is written, and
+    every value equals the old one when the step changed nothing, so
+    applying a write is always safe (no-op requests store back old state).
+
+    Shapes are scalar for the serial fused scan and ``(W,)``-batched for
+    the bank-wavefront scan (``core/sched/wavefront.py``): the SAME
+    ``apply_write`` serves both because ``.at[bank, w]`` indexing accepts a
+    scalar bank or a vector of *distinct* banks alike — wave formation
+    guarantees distinctness, which is what makes the vectorized scatter
+    deterministic.
+    """
+    w: jax.Array          # slot written (hit slot or insertion landing slot)
+    tag: jax.Array
+    valid: jax.Array
+    dirty: jax.Array
+    benefit: jax.Array
+    last_use: jax.Array
+    row_delta: jax.Array  # row_sum increment at w // segs_per_row
+    evict_row: jax.Array
+    evict_mask: jax.Array  # (max_segs_per_row,) bool
+    tr_idx: jax.Array      # miss-tracker index touched
+    miss_tag: jax.Array
+    miss_cnt: jax.Array
+    n_valid_inc: jax.Array
+
+
+def apply_write(fts: FTS, bank: jax.Array, segs_per_row,
+                wr: SlotWrite) -> FTS:
+    """Apply one step's ``SlotWrite`` to a *banked* store (leaves with a
+    leading ``(n_banks,)`` axis).  ``bank`` may be a scalar (serial scan) or
+    a vector of distinct banks with ``(W,)``-batched write values (the
+    wavefront scan) — integer scatters to distinct rows are deterministic,
+    and ``row_sum`` uses ``.add`` so duplicate *rows within a bank* (never
+    across banks) still cannot occur."""
+    spr = jnp.asarray(segs_per_row, jnp.int32)
+    return fts._replace(
+        tags=fts.tags.at[bank, wr.w].set(wr.tag),
+        valid=fts.valid.at[bank, wr.w].set(wr.valid),
+        dirty=fts.dirty.at[bank, wr.w].set(wr.dirty),
+        benefit=fts.benefit.at[bank, wr.w].set(wr.benefit),
+        last_use=fts.last_use.at[bank, wr.w].set(wr.last_use),
+        row_sum=fts.row_sum.at[bank, wr.w // spr].add(wr.row_delta),
+        evict_row=fts.evict_row.at[bank].set(wr.evict_row),
+        evict_mask=fts.evict_mask.at[bank].set(wr.evict_mask),
+        miss_tags=fts.miss_tags.at[bank, wr.tr_idx].set(wr.miss_tag),
+        miss_cnt=fts.miss_cnt.at[bank, wr.tr_idx].set(wr.miss_cnt),
+        n_valid=fts.n_valid.at[bank].add(wr.n_valid_inc),
+    )
+
+
 def invalidate(fts: FTS, slot: jax.Array, segs_per_row) -> FTS:
     """Drop an entry: clear its bits, return its benefit contribution and
     push the slot on the free stack — all O(1).  A no-op (bitwise) when the

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core import dram, traces
 from repro.core.energy import ENERGY
+from repro.core.sched import policies as sched_policies
 from repro.core.timing import (DDR4, GEOM, DRAMTimings, MechConfig,
                                paper_config, shared_static, static_group_key)
 
@@ -133,6 +134,7 @@ def _result_from_counters(cnt, cfg: MechConfig, apps: Sequence,
 
 def run_mechanism(trace: dram.Trace, cfg: MechConfig,
                   apps: Sequence[traces.AppParams]) -> RunResult:
+    trace = sched_policies.schedule(trace, cfg.sched)
     multi = np.asarray(trace.t_issue).ndim == 2
     cnt = dram.run_channels(trace, cfg) if multi else dram.run_channel(trace, cfg)
     n_channels = np.asarray(trace.t_issue).shape[0] if multi else 1
@@ -145,20 +147,26 @@ def sweep(trace: dram.Trace, cfgs: Sequence[MechConfig],
     """Run an arbitrary config grid with one compiled scan per static
     structure (DESIGN.md §3).
 
-    Configs are grouped by ``timing.static_group_key`` and bucketed to the
-    group's tightest shared structure (``timing.shared_static``); each
-    group's dynamic params are stacked and dispatched as one
-    ``dram.run_sweep`` call, so N configs cost one compilation per group
-    instead of N.  Results come back in input order and are
-    bitwise-identical to per-config ``run_mechanism``.
+    Configs are grouped by ``timing.static_group_key`` plus their
+    controller (``cfg.sched``, DESIGN.md §10) and bucketed to the group's
+    tightest shared structure (``timing.shared_static``); each group's
+    dynamic params are stacked and dispatched as one ``dram.run_sweep``
+    call over the group's *scheduled* trace, so N configs cost one
+    compilation per group instead of N — controller grids replay
+    reordered copies of the trace through the same compiled scan.
+    Results come back in input order and are bitwise-identical to
+    per-config ``run_mechanism``.
     """
     multi = np.asarray(trace.t_issue).ndim == 2
     n_channels = np.asarray(trace.t_issue).shape[0] if multi else 1
     out: List[RunResult | None] = [None] * len(cfgs)
-    for static, idxs in _static_groups(cfgs).items():
+    scheduled: Dict[object, dram.Trace] = {}   # host pass once per controller
+    for (static, sc), idxs in _static_groups(cfgs).items():
+        if sc not in scheduled:
+            scheduled[sc] = sched_policies.schedule(trace, sc)
         batch = jax.tree.map(lambda *xs: jnp.stack(xs),
                              *[cfgs[i].params(t) for i in idxs])
-        cnts = dram.run_sweep(trace, static, batch)
+        cnts = dram.run_sweep(scheduled[sc], static, batch)
         results = _results_from_counters_batch(
             cnts, [cfgs[i] for i in idxs], apps, n_channels)
         for j, i in enumerate(idxs):
@@ -168,16 +176,20 @@ def sweep(trace: dram.Trace, cfgs: Sequence[MechConfig],
 
 def _static_groups(cfgs: Sequence[MechConfig]) -> Dict[object, List[int]]:
     """Group a config grid for batched dispatch: configs sharing a
-    ``static_group_key`` (mechanism/policy/fts_kernel) go to ONE group and
-    the group's shared static is the *tightest* bucket covering its maximum
-    FTS geometry (``timing.shared_static``).  A single-config group — e.g.
+    ``static_group_key`` (mechanism/policy/fts_kernel) AND a controller
+    (``cfg.sched``) go to ONE group and the group's shared static is the
+    *tightest* bucket covering its maximum FTS geometry
+    (``timing.shared_static``).  A single-config group — e.g.
     ``run_single_core``'s one point per mechanism — therefore gets the
-    small 512-slot bucket instead of the 1024-slot sweep ceiling."""
+    small 512-slot bucket instead of the 1024-slot sweep ceiling.
+    Controllers split the *dispatch* (each replays a differently-ordered
+    trace) but never the *compilation*: scheduled traces keep the input
+    shape, so every sched group of one static structure reuses one scan."""
     keyed: Dict[object, List[int]] = {}
     for i, cfg in enumerate(cfgs):
-        keyed.setdefault(static_group_key(cfg), []).append(i)
-    return {shared_static([cfgs[i] for i in idxs]): idxs
-            for idxs in keyed.values()}
+        keyed.setdefault((static_group_key(cfg), cfg.sched), []).append(i)
+    return {(shared_static([cfgs[i] for i in idxs]), sc): idxs
+            for (_, sc), idxs in keyed.items()}
 
 
 def sweep_traces(trs: Sequence[dram.Trace], cfgs: Sequence[MechConfig],
@@ -207,16 +219,30 @@ def sweep_traces(trs: Sequence[dram.Trace], cfgs: Sequence[MechConfig],
     n_channels = np.asarray(trs[0].t_issue).shape[0] if multi else 1
     W = len(trs)
     t_max = max(np.asarray(tr.t_issue).shape[-1] for tr in trs)
-    trs = [dram.noop_pad(tr, t_max) for tr in trs]
-    if multi:
-        flat = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *trs)
-    else:
-        flat = jax.tree.map(lambda *xs: jnp.stack(xs), *trs)
+    stacked: Dict[object, dram.Trace] = {}
+
+    def flat_for(sc):
+        """Channel-stack the W workload traces under controller ``sc``
+        (scheduling precedes no-op padding so the no-op suffix invariant
+        holds); memoized per distinct controller."""
+        if sc not in stacked:
+            s_trs = [dram.noop_pad(sched_policies.schedule(tr, sc), t_max)
+                     for tr in trs]
+            if multi:
+                stacked[sc] = jax.tree.map(
+                    lambda *xs: jnp.concatenate(
+                        [jnp.asarray(x) for x in xs], axis=0), *s_trs)
+            else:
+                stacked[sc] = jax.tree.map(
+                    lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+                    *s_trs)
+        return stacked[sc]
+
     out: List[List[RunResult | None]] = [[None] * len(cfgs) for _ in range(W)]
-    for static, idxs in _static_groups(cfgs).items():
+    for (static, sc), idxs in _static_groups(cfgs).items():
         batch = jax.tree.map(lambda *xs: jnp.stack(xs),
                              *[cfgs[i].params(t) for i in idxs])
-        cnts = dram.run_sweep(flat, static, batch)   # leaves (P, W*C, ...)
+        cnts = dram.run_sweep(flat_for(sc), static, batch)  # (P, W*C, ...)
         C = n_channels
         for w in range(W):
             # slice workload w back out; single-channel inputs also drop the

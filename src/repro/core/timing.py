@@ -109,6 +109,65 @@ MECHANISMS = ("base", "lisa_villa", "figcache_slow", "figcache_fast",
               "figcache_ideal", "lldram")
 
 
+@dataclasses.dataclass(frozen=True)
+class SchedConfig:
+    """Memory-controller scheduling discipline (DESIGN.md §10).
+
+    The paper evaluates FIGCache under an FR-FCFS controller (§7); the seed
+    harness had none ("the trace order is the schedule").  A ``SchedConfig``
+    names a controller: ``core/sched/policies.py`` realizes it as a
+    *trace-preprocessing* pass (a per-channel service-order permutation) that
+    runs on the host before the compiled scan, so the scheduling knobs never
+    enter the scan and a policy grid reuses ONE compilation — the scheduled
+    traces all share the original trace's shape.  It lives here next to
+    ``StaticConfig`` / ``MechParams`` because it is the third leg of a
+    ``MechConfig``: hashable, tiny, and a grouping key of
+    ``simulator.sweep`` (configs differing only in ``sched`` replay
+    differently-ordered copies of the same trace through the same scan).
+
+    Knobs:
+      * ``policy`` — ``"fcfs"`` (service = arrival order, the seed
+        behavior) or ``"frfcfs"`` (row-hit-first within the transaction
+        queue window, the paper's §7 controller).
+      * ``queue_depth`` — the controller's lookahead window: only the next
+        ``queue_depth`` pending requests are candidates for reordering.
+      * ``starve_cap`` — FR-FCFS fairness: after the oldest pending request
+        has been bypassed by ``starve_cap`` row hits it is scheduled
+        unconditionally.  ``starve_cap=0`` degenerates to FCFS.
+      * ``arrival_window_ns`` — the queue holds *arrived* requests: a
+        request may bypass the oldest pending one only if it was issued
+        within this many ns of it.  Without the bound a request-count
+        window would let the scheduler see arbitrarily far into the
+        issue-future and starve present requests behind it; the default
+        is service-latency scale (~tRC), i.e. "arrived while the oldest
+        request is being served".
+      * ``write_drain`` / ``drain_batch`` — posted writes: writes are held
+        in a write queue while reads proceed, and the queue drains as a
+        batch (sorted by (bank, row) for row-buffer locality) once it
+        reaches ``drain_batch`` entries (§7's write-drain batching).
+    """
+    policy: str = "fcfs"
+    queue_depth: int = 32
+    starve_cap: int = 16
+    arrival_window_ns: int = 50
+    write_drain: bool = False
+    drain_batch: int = 16
+
+    def __post_init__(self):
+        assert self.policy in ("fcfs", "frfcfs"), self.policy
+        assert self.queue_depth >= 1 and self.starve_cap >= 0
+        assert self.arrival_window_ns >= 0 and self.drain_batch >= 1
+
+    @property
+    def is_identity(self) -> bool:
+        """True when scheduling cannot change the service order (the
+        fast path: ``sched.schedule`` returns the trace untouched)."""
+        return self.policy == "fcfs" and not self.write_drain
+
+
+SCHED_FCFS = SchedConfig()
+
+
 # Padded FTS allocation buckets (DESIGN.md §3/§9).  A two-rung ladder:
 #   SMALL_*  — covers every default §8 configuration (512 slots = 64 cache
 #              rows x 8 segs; lisa_villa's 512 rows x 1 seg; spr <= 8), so
@@ -206,6 +265,10 @@ class MechConfig:
     insert_threshold: int = 1      # consecutive misses before insertion
     benefit_bits: int = 5
     fts_kernel: bool = False       # fuse lookup+victim via kernels/fts_lookup
+    # which memory controller serves the trace (DESIGN.md §10): a host-side
+    # trace-preprocessing knob — it never enters the compiled scan, so any
+    # sched grid shares the scan compilations of its mech/policy grid
+    sched: SchedConfig = SCHED_FCFS
 
     def __post_init__(self):
         assert self.mechanism in MECHANISMS, self.mechanism

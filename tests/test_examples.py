@@ -1,0 +1,43 @@
+"""Smoke tests for the runnable examples (ISSUE 4 satellite).
+
+``examples/quickstart.py`` and ``examples/dram_cache_demo.py`` ran in no
+test tier, so API refactors could silently break them.  Run them
+in-process (``runpy``) on tiny traces via the ``REPRO_EXAMPLE_REQS``
+knob — the point is "the public API they exercise still exists and
+produces sane output", not the numbers.
+"""
+import pathlib
+import runpy
+
+import pytest
+
+EXAMPLES = pathlib.Path(__file__).resolve().parent.parent / "examples"
+
+
+def _run(name, monkeypatch, capsys):
+    monkeypatch.setenv("REPRO_EXAMPLE_REQS", "256")
+    runpy.run_path(str(EXAMPLES / name), run_name="__main__")
+    return capsys.readouterr().out
+
+
+def test_quickstart_smoke(monkeypatch, capsys):
+    out = _run("quickstart.py", monkeypatch, capsys)
+    assert "[1] mcf speedup" in out
+    assert "[2] FIGARO reloc" in out and "OK" in out
+    assert "[3] qwen2-7b" in out
+
+
+def test_dram_cache_demo_smoke(monkeypatch, capsys):
+    out = _run("dram_cache_demo.py", monkeypatch, capsys)
+    assert "FIGARO timing" in out
+    # all six §8 mechanisms must report a row
+    for mech in ("base", "lisa_villa", "figcache_slow", "figcache_fast",
+                 "figcache_ideal", "lldram"):
+        assert mech in out
+    assert "row-hit" in out
+
+
+def test_examples_exist():
+    """The smoke tests above must track the example set."""
+    have = {p.name for p in EXAMPLES.glob("*.py")}
+    assert {"quickstart.py", "dram_cache_demo.py"} <= have
