@@ -1,18 +1,36 @@
-"""Shared benchmark plumbing: cached traces/workload runs, sweep-grid helpers."""
+"""Shared benchmark plumbing: cached traces/workload runs, sweep-grid helpers.
+
+Cache discipline: every cached trace or workload batch is keyed on a
+**content hash** of what actually determines it (``workload.content_hash``
+over the app tuples / specs, request counts and seeds) — never on argument
+tuple identity — so two descriptions of the same workload share one entry
+and a new scenario family can never silently collide with an old key.
+"""
 from __future__ import annotations
 
-import functools
 import time
+from typing import Dict
 
 import numpy as np
 
-from repro.core import simulator, traces
+from repro.core import simulator, traces, workload
 
 QUICK_REQS_1CORE = 10240
 QUICK_REQS_8CORE = 6144
 LONG_REQS_8CORE = 12288   # figs 12/14: enough traffic for eviction pressure
 IS_QUICK = False          # set_quick() ran: figures may rescale knobs so
                           # shrunken traces still create cache pressure
+
+# content-hash keyed store for everything below (traces, batches, scenario
+# specs' generated traces)
+_CACHE: Dict[tuple, object] = {}
+
+
+def _cached(kind: str, key_obj, build):
+    key = (kind, workload.content_hash(key_obj))
+    if key not in _CACHE:
+        _CACHE[key] = build()
+    return _CACHE[key]
 
 
 def set_quick() -> None:
@@ -22,35 +40,40 @@ def set_quick() -> None:
     QUICK_REQS_1CORE = 2048
     QUICK_REQS_8CORE = 1024
     LONG_REQS_8CORE = 2048
-    eight_trace.cache_clear()
-    single_core_batch.cache_clear()
-    eight_core_batch.cache_clear()
+    _CACHE.clear()
 
 
-@functools.lru_cache(maxsize=None)
 def eight_trace(idx: int, per_channel=None, seed: int = 2):
     """The (trace, apps) of one multiprogrammed workload, built once."""
     name, frac, apps = traces.eight_core_workloads()[idx]
-    tr = traces.build_trace(apps, 4, per_channel or QUICK_REQS_8CORE, seed)
-    return tr, tuple(apps)
+    pc = per_channel or QUICK_REQS_8CORE
+    return _cached(
+        "eight_trace", (tuple(apps), pc, seed),
+        lambda: (traces.build_trace(apps, 4, pc, seed), tuple(apps)))
 
 
-@functools.lru_cache(maxsize=None)
 def single_core_batch(apps: tuple, mechs=simulator.PAPER_MECHS):
     """All apps x all mechanisms via stacked traces: one compiled scan per
     static structure covers the whole fig-7 cross product."""
-    return simulator.run_single_core_batch(list(apps), mechanisms=mechs,
-                                           n_reqs=QUICK_REQS_1CORE)
+    return _cached(
+        "single_core_batch", (apps, tuple(mechs), QUICK_REQS_1CORE),
+        lambda: simulator.run_single_core_batch(
+            list(apps), mechanisms=mechs, n_reqs=QUICK_REQS_1CORE))
 
 
-@functools.lru_cache(maxsize=None)
 def eight_core_batch(idxs: tuple, mechs=simulator.PAPER_MECHS,
                      per_channel=None):
     """All workloads x all mechanisms via stacked traces (fig 8)."""
     wls = [traces.eight_core_workloads()[i] for i in idxs]
-    res = simulator.run_eight_core_batch(
-        wls, mechanisms=mechs, per_channel=per_channel or QUICK_REQS_8CORE)
-    return dict(zip(idxs, res))
+    pc = per_channel or QUICK_REQS_8CORE
+    apps_key = tuple(tuple(apps) for _, _, apps in wls)
+
+    def build():
+        res = simulator.run_eight_core_batch(wls, mechanisms=mechs,
+                                             per_channel=pc)
+        return dict(zip(idxs, res))
+
+    return _cached("eight_core_batch", (apps_key, tuple(mechs), pc), build)
 
 
 def eight_core_grid(idx: int, cfgs, per_channel=None):
@@ -58,6 +81,22 @@ def eight_core_grid(idx: int, cfgs, per_channel=None):
     per static structure (simulator.sweep)."""
     tr, apps = eight_trace(idx, per_channel)
     return simulator.sweep(tr, list(cfgs), apps)
+
+
+def scenario_specs(per_channel=None, n_cores: int = 8, n_channels: int = 4,
+                   seed: int = 2) -> Dict[str, workload.WorkloadSpec]:
+    """One preset ``WorkloadSpec`` per scenario family (DESIGN.md §11),
+    at the benchmark trace scale — the workload axis figs 3/17 sweep."""
+    pc = per_channel or QUICK_REQS_8CORE
+    return {fam: workload.preset(fam, n_cores=n_cores,
+                                 n_channels=n_channels, per_channel=pc,
+                                 seed=seed)
+            for fam in workload.FAMILIES}
+
+
+def scenario_trace(spec: workload.WorkloadSpec):
+    """Device-generate (and cache, by spec content) one scenario trace."""
+    return _cached("scenario_trace", spec, lambda: workload.generate(spec))
 
 
 # two workloads per intensity class for quick benches

@@ -1,0 +1,39 @@
+"""Figure 3 (motivation): how much of an activated row is actually touched.
+
+The paper's central observation (§3) is that workloads touch only a small
+fraction of each activated row before it is evicted from the row buffer —
+the waste FIGCache's segment-granularity caching recovers.  This module
+produces that motivational stat from *our* workloads: the per-visit
+segment-footprint CDF (``workload.characterize``) for the numpy oracle mix
+and for every device-generated scenario family (DESIGN.md §11).
+
+Headline: ``<name>/visit_leq2`` — the fraction of row activations that
+touch at most 2 of the row's 8 segments (<= 1/4 of the row).  The paper
+reports most activations touch <= 1/8-1/4; zipf-reuse and embedding
+workloads should land near 1.0, pure streaming near 0 — the spread that
+makes scenario diversity an evaluation axis (fig17).
+"""
+from benchmarks import common
+from repro.core import workload
+
+
+def run():
+    rows, summary = [], {}
+    cases = {"oracle": common.eight_trace(common.WL_IDX[100][0])[0]}
+    for fam, spec in common.scenario_specs().items():
+        cases[fam] = common.scenario_trace(spec)
+    for name, tr in cases.items():
+        prof = workload.characterize(tr)
+        s = workload.summarize(prof)
+        cdf = prof["visit_footprint_cdf"]
+        rows.append({"workload": name, **s,
+                     "cdf": [round(float(x), 4) for x in cdf]})
+        summary[f"{name}/visit_leq2"] = s["visit_leq2seg"]
+        summary[f"{name}/footprint"] = s["visit_footprint"]
+        summary[f"{name}/row_hit_potential"] = s["row_hit_potential"]
+    return rows, summary
+
+
+if __name__ == "__main__":
+    for r in run()[0]:
+        print(r)

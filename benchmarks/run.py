@@ -19,16 +19,19 @@ def main(argv=None) -> None:
                     help="comma-separated benchmark names to run")
     args = ap.parse_args(argv)
 
-    from benchmarks import (common, fig07_single_core, fig08_eight_core,
-                            fig09_cache_hit, fig10_row_hit, fig11_energy,
-                            fig12_capacity, fig13_segment_size,
-                            fig14_replacement, fig15_insertion,
-                            fig16_scheduler, overhead, sweep_engine)
+    from benchmarks import (common, fig03_footprint, fig07_single_core,
+                            fig08_eight_core, fig09_cache_hit,
+                            fig10_row_hit, fig11_energy, fig12_capacity,
+                            fig13_segment_size, fig14_replacement,
+                            fig15_insertion, fig16_scheduler,
+                            fig17_scenarios, overhead, sweep_engine)
 
     if args.quick:
         common.set_quick()
 
     benches = [
+        ("fig03_footprint", fig03_footprint,
+         lambda s: s.get("oracle/visit_leq2")),
         ("fig07_single_core", fig07_single_core,
          lambda s: s.get("intensive/figcache_fast")),
         ("fig08_eight_core", fig08_eight_core,
@@ -46,11 +49,14 @@ def main(argv=None) -> None:
         ("fig15_insertion", fig15_insertion, lambda s: s.get("th=1")),
         ("fig16_scheduler", fig16_scheduler,
          lambda s: s.get("frfcfs_qd16")),
+        ("fig17_scenarios", fig17_scenarios,
+         lambda s: s.get("embed/figcache_fast")),
         ("sweep_engine", sweep_engine,
          lambda s: (f"jits {s['jits_before']}->{s['jits_after']} "
                     f"cap={s['jits_capacity']} seg={s['jits_segment']} "
                     f"hotloop={s['hotloop_speedup']}x "
-                    f"wavefront={s['wavefront_speedup']}x")),
+                    f"wavefront={s['wavefront_speedup']}x "
+                    f"tracegen={s['tracegen_speedup']}x")),
         ("overhead_table", overhead,
          lambda s: s.get("fts_kB_per_channel")),
     ]

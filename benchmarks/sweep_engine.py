@@ -37,6 +37,11 @@ The WAVEFRONT section (DESIGN.md §10) measures the bank-wavefront scan
 fig-12 grid — single-stream regime asserted >= 2x, batched regime
 recorded — into ``BENCH_wavefront.json`` (also published by CI).
 
+The TRACEGEN section (DESIGN.md §11) measures the device workload engine
+(``core/workload/``) against the numpy oracle generator on the 1M-request
+8-core acceptance workload — asserted >= 10x reqs/sec (2x ``--quick``
+tripwire) — into ``BENCH_tracegen.json`` (also published by CI).
+
 Compilations are counted via ``dram.JIT_TRACE_LOG`` (the scan body logs one
 entry per trace).
 """
@@ -50,7 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core import dram
+from repro.core import dram, traces, workload
 from repro.core.timing import paper_config, shared_static
 
 # 8 configs, one static structure: threshold x benefit_bits grid
@@ -64,6 +69,7 @@ HOTLOOP_GRID = [dict(cache_rows=cr) for cr in (4, 8, 16, 32, 64)]
 
 BENCH_JSON = "BENCH_hotloop.json"
 BENCH_WAVE_JSON = "BENCH_wavefront.json"
+BENCH_TRACEGEN_JSON = "BENCH_tracegen.json"
 # the wavefront scheduler's bank-level-parallelism window (DESIGN.md §10)
 WAVE_LOOKAHEAD = 32
 
@@ -225,6 +231,50 @@ def _wavefront_report(tr):
     }
 
 
+def _tracegen_report():
+    """Trace-generation throughput: device workload engine vs the numpy
+    oracle on an 8-core multiprogrammed mix (DESIGN.md §11), written to
+    ``BENCH_tracegen.json``.
+
+    Full mode builds the acceptance-bar workload — a 1M-request 8-core
+    mix (4 channels x 250k) — and asserts the device path is >= 10x the
+    numpy ``traces.build_trace`` reqs/sec; ``--quick`` CI shrinks the
+    trace (device dispatch overhead dominates there) and enforces a 2x
+    tripwire so a regression to parity still fails loudly.  Device
+    timings exclude the one-time generator compile (which is also
+    counted: one per static structure, asserted <= 1 for the re-run).
+    """
+    name, frac, apps = traces.eight_core_workloads()[15]   # 100% intensive
+    per_channel = 2048 if common.IS_QUICK else 250_000
+    n = 4 * per_channel
+    spec = workload.spec_from_apps(apps, 4, per_channel, seed=2)
+    jax.block_until_ready(workload.generate(spec))         # compile + warm
+    reps = 1 if common.IS_QUICK else 3
+    j0 = workload.gen_trace_count()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        jax.block_until_ready(workload.generate(spec))
+        best = min(best, time.time() - t0)
+    jits = workload.gen_trace_count() - j0
+    assert jits <= 1, f"warm trace generation retraced {jits}x"
+    t0 = time.time()
+    tr_np = traces.build_trace(apps, 4, per_channel, 2)
+    t_np = time.time() - t0
+    rate_dev, rate_np = n / best, n / t_np
+    speedup = rate_dev / rate_np
+    floor = 2.0 if common.IS_QUICK else 10.0
+    assert speedup >= floor, \
+        f"device tracegen {speedup:.1f}x below the {floor}x floor"
+    return {
+        "tracegen_reqs": n,
+        "reqs_per_sec_numpy": round(rate_np),
+        "reqs_per_sec_device": round(rate_dev),
+        "tracegen_speedup": round(speedup, 1),
+        "tracegen_quick": common.IS_QUICK,
+    }
+
+
 def run():
     cfgs = [paper_config("figcache_fast", **kw) for kw in GRID]
     static = shared_static(cfgs)
@@ -276,6 +326,12 @@ def run():
         json.dump(wavefront, f, indent=2, sort_keys=True)
         f.write("\n")
 
+    # ---- trace generation: device workload engine vs numpy (§11) ----------
+    tracegen = _tracegen_report()
+    with open(BENCH_TRACEGEN_JSON, "w") as f:
+        json.dump(tracegen, f, indent=2, sort_keys=True)
+        f.write("\n")
+
     n = len(cfgs)
     summary = {
         "n_configs": n,
@@ -288,6 +344,7 @@ def run():
         "wall_speedup": round(t_before / max(t_after, 1e-9), 2),
         **hot,
         "wavefront_speedup": wavefront["wavefront_speedup"],
+        "tracegen_speedup": tracegen["tracegen_speedup"],
     }
     with open(BENCH_JSON, "w") as f:
         json.dump(summary, f, indent=2, sort_keys=True)

@@ -1,29 +1,45 @@
 """Quickstart: the three layers of this framework in ~60 lines.
 
-1. The paper-faithful FIGCache DRAM simulator (speedups vs Base).
+1. The paper-faithful FIGCache DRAM simulator (speedups vs Base) — on the
+   default "mcf" application trace or, with ``--scenario <family>``, on a
+   device-generated scenario workload (DESIGN.md §11: stream, stride,
+   pointer_chase, embed, phase_mix, zipf_reuse).
 2. The FIGARO substrate as a data-plane op (segment relocation).
 3. A model from the arch pool doing a forward + a decode step.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [--scenario embed]
 
 ``REPRO_EXAMPLE_REQS`` shrinks the simulated trace (the CI smoke test in
 ``tests/test_examples.py`` runs this file with a tiny value).
 """
+import argparse
 import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import simulator, workload
+
 N_REQS = int(os.environ.get("REPRO_EXAMPLE_REQS", "6144"))
+ap = argparse.ArgumentParser(description=__doc__)
+ap.add_argument("--scenario", default="app",
+                choices=("app",) + workload.FAMILIES,
+                help="workload: the mcf app trace (default) or a "
+                     "device-generated scenario family")
+args, _ = ap.parse_known_args()
 
-# --- 1. paper reproduction: FIGCache vs Base on an intensive app ----------
-from repro.core import simulator
-
-res = simulator.run_single_core(
-    "mcf", mechanisms=("base", "figcache_fast", "lisa_villa"),
-    n_reqs=N_REQS)
+# --- 1. paper reproduction: FIGCache vs Base -------------------------------
+MECHS = ("base", "figcache_fast", "lisa_villa")
+if args.scenario == "app":
+    label = "mcf"
+    res = simulator.run_single_core("mcf", mechanisms=MECHS, n_reqs=N_REQS)
+else:
+    label = f"scenario={args.scenario}"
+    spec = workload.preset(args.scenario, n_cores=1, n_channels=1,
+                           per_channel=N_REQS, seed=1)
+    res = simulator.run_scenario(spec, mechanisms=MECHS)
 s = simulator.speedup_summary(res)
-print(f"[1] mcf speedup: FIGCache-Fast {s['figcache_fast']:.3f}x "
+print(f"[1] {label} speedup: FIGCache-Fast {s['figcache_fast']:.3f}x "
       f"(LISA-VILLA {s['lisa_villa']:.3f}x)  "
       f"row-hit {res['base'].row_hit_rate:.2f} -> "
       f"{res['figcache_fast'].row_hit_rate:.2f}")

@@ -25,6 +25,12 @@ Python-side loop for the IPC/energy model.  ``run_single_core`` /
 ``run_eight_core`` are thin wrappers that sweep one config per mechanism;
 ``run_single_core_batch`` / ``run_eight_core_batch`` are their stacked-trace
 counterparts (figs 7/8).
+
+Workloads are first-class sweep axes too (DESIGN.md §11): ``sweep_traces``
+accepts ``workload.WorkloadSpec`` entries and synthesizes those traces on
+device (specs sharing a generator structure batch into one vmapped compiled
+call), and ``run_scenario`` evaluates the paper mechanisms on one
+device-generated scenario family.
 """
 from __future__ import annotations
 
@@ -36,7 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dram, traces
+from repro.core import dram, traces, workload
 from repro.core.energy import ENERGY
 from repro.core.sched import policies as sched_policies
 from repro.core.timing import (DDR4, GEOM, DRAMTimings, MechConfig,
@@ -192,8 +198,8 @@ def _static_groups(cfgs: Sequence[MechConfig]) -> Dict[object, List[int]]:
             for (_, sc), idxs in keyed.items()}
 
 
-def sweep_traces(trs: Sequence[dram.Trace], cfgs: Sequence[MechConfig],
-                 apps_list: Sequence[Sequence[traces.AppParams]],
+def sweep_traces(trs: Sequence, cfgs: Sequence[MechConfig],
+                 apps_list=None,
                  t: DRAMTimings = DDR4) -> List[List[RunResult]]:
     """Cross-workload batching: W traces x N configs in one compiled scan
     per static structure (ROADMAP: collapse figs 7/8).
@@ -208,8 +214,31 @@ def sweep_traces(trs: Sequence[dram.Trace], cfgs: Sequence[MechConfig],
     so arbitrary workload mixes batch; they must still agree on the channel
     count.  Returns ``results[w][i]`` for workload ``trs[w]`` under config
     ``cfgs[i]``, bitwise-equal to per-workload ``sweep`` calls.
+
+    Entries of ``trs`` may also be ``workload.WorkloadSpec``s (DESIGN.md
+    §11): those traces are synthesized *on device* — specs sharing a
+    generator structure batch into one vmapped compiled call
+    (``workload.generate_many``) — so a workload-grid x config-grid cross
+    product runs without any host trace building.  ``apps_list`` may be
+    omitted when every entry is a spec (each spec supplies its own
+    ``apps()``); with mixed entries, pass ``None`` per spec position to
+    use the spec's apps.
     """
-    assert len(trs) == len(apps_list) and trs, "one apps tuple per trace"
+    trs = list(trs)
+    assert trs, "need at least one workload"
+    spec_idx = [i for i, x in enumerate(trs)
+                if isinstance(x, workload.WorkloadSpec)]
+    if apps_list is None:
+        assert len(spec_idx) == len(trs), \
+            "apps_list may be omitted only when every entry is a WorkloadSpec"
+        apps_list = [None] * len(trs)
+    apps_list = [trs[i].apps() if a is None else a
+                 for i, a in enumerate(apps_list)]
+    if spec_idx:
+        gen = workload.generate_many([trs[i] for i in spec_idx])
+        for i, tr in zip(spec_idx, gen):
+            trs[i] = tr
+    assert len(trs) == len(apps_list), "one apps tuple per trace"
     ndims = {np.asarray(tr.t_issue).ndim for tr in trs}
     assert len(ndims) == 1, f"traces must agree on channel layout: {ndims}"
     multi = np.asarray(trs[0].t_issue).ndim == 2
@@ -268,7 +297,7 @@ def speedup(res: RunResult, base: RunResult) -> float:
     return weighted_speedup(res, base) / len(base.ipc)
 
 
-def _mech_grid(mechanisms, cfg_overrides) -> List[MechConfig]:
+def mech_grid(mechanisms, cfg_overrides) -> List[MechConfig]:
     return [paper_config(m, **(cfg_overrides or {})) if m != "base"
             else paper_config(m) for m in mechanisms]
 
@@ -283,7 +312,7 @@ def run_single_core(app_name: str, mechanisms=PAPER_MECHS, n_reqs: int = 24576,
                     seed: int = 1, cfg_overrides: dict | None = None
                     ) -> Dict[str, RunResult]:
     tr, apps = _single_trace(app_name, n_reqs, seed)
-    res = sweep(tr, _mech_grid(mechanisms, cfg_overrides), apps)
+    res = sweep(tr, mech_grid(mechanisms, cfg_overrides), apps)
     return dict(zip(mechanisms, res))
 
 
@@ -292,7 +321,7 @@ def run_eight_core(workload, mechanisms=PAPER_MECHS, per_channel: int = 12288,
                    ) -> Dict[str, RunResult]:
     name, frac, apps = workload
     tr = traces.build_trace(apps, 4, per_channel, seed)
-    res = sweep(tr, _mech_grid(mechanisms, cfg_overrides), apps)
+    res = sweep(tr, mech_grid(mechanisms, cfg_overrides), apps)
     return dict(zip(mechanisms, res))
 
 
@@ -305,7 +334,7 @@ def run_single_core_batch(app_names: Sequence[str], mechanisms=PAPER_MECHS,
     covers the whole apps x mechanisms cross product (``sweep_traces``)."""
     pairs = [_single_trace(a, n_reqs, seed) for a in app_names]
     res = sweep_traces([p[0] for p in pairs],
-                       _mech_grid(mechanisms, cfg_overrides),
+                       mech_grid(mechanisms, cfg_overrides),
                        [p[1] for p in pairs])
     return {a: dict(zip(mechanisms, r)) for a, r in zip(app_names, res)}
 
@@ -318,9 +347,20 @@ def run_eight_core_batch(workloads, mechanisms=PAPER_MECHS,
     multiprogrammed workloads run as one W*C-channel batch per structure."""
     trs = [traces.build_trace(apps, 4, per_channel, seed)
            for _, _, apps in workloads]
-    res = sweep_traces(trs, _mech_grid(mechanisms, cfg_overrides),
+    res = sweep_traces(trs, mech_grid(mechanisms, cfg_overrides),
                        [apps for _, _, apps in workloads])
     return [dict(zip(mechanisms, r)) for r in res]
+
+
+def run_scenario(spec: "workload.WorkloadSpec", mechanisms=PAPER_MECHS,
+                 cfg_overrides: dict | None = None) -> Dict[str, RunResult]:
+    """Evaluate the paper mechanisms on one device-generated scenario
+    (DESIGN.md §11): the workload counterpart of ``run_single_core`` /
+    ``run_eight_core``, with the trace synthesized on device."""
+    res = sweep(workload.generate(spec), mech_grid(mechanisms,
+                                                   cfg_overrides),
+                spec.apps())
+    return dict(zip(mechanisms, res))
 
 
 def speedup_summary(results: Dict[str, RunResult]) -> Dict[str, float]:

@@ -25,7 +25,7 @@ import hashlib
 
 import numpy as np
 
-from repro.core.dram import Trace
+from repro.core.dram import NOOP_ISSUE, Trace
 from repro.core.timing import GEOM, TICKS_PER_NS
 
 INTENSIVE = ["zeusmp", "leslie3d", "mcf", "GemsFDTD", "libquantum",
@@ -180,8 +180,12 @@ def gen_core_stream(app: AppParams, core: int, n_reqs: int, seed: int,
 def build_trace(apps, n_channels: int, per_channel: int, seed: int = 0):
     """Merge per-core streams into per-channel, time-sorted Trace arrays.
 
-    apps: list of AppParams, one per core.  Returns (Trace with (C, T) leaves,
-    per-core request counts actually kept).
+    apps: list of AppParams, one per core.  Returns a Trace with (C, T)
+    leaves.  A channel that receives fewer than ``per_channel`` requests is
+    completed with no-op sentinel requests (``dram.NOOP_ISSUE`` suffix).
+    The device port of this model is ``workload.spec_from_apps`` /
+    ``workload.generate`` (DESIGN.md §11); this numpy path remains the
+    statistical oracle it is validated against.
     """
     total = n_channels * per_channel
     per_core = total // len(apps) + per_channel
@@ -199,13 +203,20 @@ def build_trace(apps, n_channels: int, per_channel: int, seed: int = 0):
     for c in range(n_channels):
         m = ch == c
         order = np.argsort(t[m], kind="stable")[:per_channel]
-        if order.size < per_channel:  # repeat tail to keep rectangular
-            order = np.pad(order, (0, per_channel - order.size), mode="edge")
         ticks = (t[m][order] * TICKS_PER_NS).astype(np.int32)
-        chans.append((ticks, bank[m][order].astype(np.int32),
-                      row[m][order].astype(np.int32),
-                      col[m][order].astype(np.int32),
-                      wr[m][order], core[m][order].astype(np.int32)))
+        fields = [ticks, bank[m][order].astype(np.int32),
+                  row[m][order].astype(np.int32),
+                  col[m][order].astype(np.int32),
+                  wr[m][order], core[m][order].astype(np.int32)]
+        if order.size < per_channel:
+            # an under-filled channel completes with no-op sentinel
+            # requests (zero-latency, counter-inert — DESIGN.md §9), never
+            # duplicated real ones, so per-channel stats stay honest
+            pad = per_channel - order.size
+            fills = (NOOP_ISSUE, 0, 0, 0, False, 0)
+            fields = [np.concatenate([f, np.full(pad, v, dtype=f.dtype)])
+                      for f, v in zip(fields, fills)]
+        chans.append(tuple(fields))
     tr = Trace(
         t_issue=np.stack([c[0] for c in chans]),
         bank=np.stack([c[1] for c in chans]),

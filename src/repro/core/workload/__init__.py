@@ -1,0 +1,26 @@
+"""Workloads as first-class, compiled, sweepable objects (DESIGN.md §11).
+
+The workload mirror of the config sweep engine: a ``WorkloadSpec`` names a
+scenario family plus shape (static — one compiled generator per structure),
+its numeric knobs travel traced in ``WorkloadParams`` (vmappable per core
+and per workload), ``generators`` materializes whole traces as single
+compiled device ops, and ``profile.characterize`` reduces any trace to the
+access-pattern stats the paper's mechanisms are sensitive to.  The numpy
+generator in ``core/traces.py`` survives as the statistical oracle the
+zipf_reuse family is validated against.
+"""
+from repro.core.workload.generators import (GEN_TRACE_LOG, gen_trace_count,
+                                            generate, generate_many)
+from repro.core.workload.params import (FAMILIES, MAX_CONTEXTS, SEG16, SPR,
+                                        CoreWorkload, WorkloadParams,
+                                        WorkloadSpec, content_hash, preset,
+                                        spec_from_apps)
+from repro.core.workload.profile import characterize, summarize
+
+__all__ = [
+    "FAMILIES", "MAX_CONTEXTS", "SEG16", "SPR",
+    "CoreWorkload", "WorkloadParams", "WorkloadSpec",
+    "content_hash", "preset", "spec_from_apps",
+    "GEN_TRACE_LOG", "gen_trace_count", "generate", "generate_many",
+    "characterize", "summarize",
+]

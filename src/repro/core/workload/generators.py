@@ -1,0 +1,379 @@
+"""Device-compiled trace synthesis: one parallel op per workload batch.
+
+The numpy generator (``core/traces.py``) walks a Python loop per request —
+the un-batched outlier in a codebase where everything else replays through
+compiled scans.  This module reformulates each scenario family so that a
+whole trace materializes as ONE compiled XLA program:
+
+ * **counter-based RNG** — every random draw is a pure function of
+   (seed, request index): ``jax.random.fold_in`` per request/visit/window
+   generation, so all requests evaluate in parallel with no carried RNG
+   state;
+ * **closed-form or prefix-scan structure** — what the numpy model carries
+   as mutable state (visit boundaries, per-context counters, window drift,
+   arrival clocks) becomes ``cumsum``/``cummax`` prefix ops or pure index
+   arithmetic over the request counter;
+ * **device channel assembly** — per-core streams hash to channels and are
+   time-sorted/truncated on device; a channel that under-fills is completed
+   with no-op sentinel requests (``dram.NOOP_ISSUE``) exactly like the
+   numpy path since its tail fix, never by duplicating real requests.
+
+One generator compiles per ``WorkloadSpec.static_key`` (family branch +
+``n_cores`` x ``n_channels`` x ``per_channel`` shape); every numeric knob
+arrives traced in ``WorkloadParams`` (leaves ``(n_cores,)``), and
+``generate_many`` vmaps a further workload axis ``(W, n_cores)`` so a whole
+scenario grid generates as one program — the workload mirror of
+``dram.run_sweep`` (DESIGN.md §3/§11).
+
+Statistical fidelity: the zipf_reuse family is the device port of the §7
+application model; it reproduces the numpy oracle's headline stats —
+row-hit potential, per-visit footprint CDF, write fraction, interarrival
+scale — within tolerance (``tests/test_workload.py``), while the oracle
+itself survives in ``core/traces.py`` as the reference distribution.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dram import NOOP_ISSUE, Trace
+from repro.core.timing import GEOM, DRAMGeometry
+from repro.core.workload.params import (MAX_CONTEXTS, SEG16, SPR,
+                                        WorkloadParams, WorkloadSpec)
+
+# Every fresh generator compilation appends a tag here (the workload mirror
+# of ``dram.JIT_TRACE_LOG``): tests assert "one compiled generator per
+# static structure", benchmarks report the count.
+GEN_TRACE_LOG: List[str] = []
+
+
+def gen_trace_count() -> int:
+    return len(GEN_TRACE_LOG)
+
+
+# ---------------------------------------------------------------------------
+# counter-based draw helpers
+# ---------------------------------------------------------------------------
+
+def _uniforms(key, n: int, tag: int, m: int):
+    """``(n, m)`` iid per-request uniforms: one counter-based sweep over
+    the request-index grid (row i is request i's draw)."""
+    return jax.random.uniform(jax.random.fold_in(key, tag), (n, m))
+
+
+def _id_uniforms(key, ids, tag: int, m: int):
+    """Uniforms keyed on (key, tag, id_i): visit- and window-level draws
+    that must be identical for every request sharing an id — one
+    ``fold_in`` per id (vmapped, so still a single parallel sweep)."""
+    k = jax.random.fold_in(key, tag)
+    return jax.vmap(
+        lambda i: jax.random.uniform(jax.random.fold_in(k, i), (m,)))(ids)
+
+
+def _zipf_from_u(u, n_pages, a):
+    """Bounded-Zipf(a) rank sample via the continuous inverse CDF (ranks
+    1..n; returns 0-based page ids).  The standard power-law inversion;
+    the a ~ 1 singularity takes the log form."""
+    n = n_pages.astype(jnp.float32)
+    one_m = 1.0 - a
+    near1 = jnp.abs(one_m) < 1e-3
+    safe = jnp.where(near1, 1.0, one_m)
+    k_pow = (u * (n ** safe - 1.0) + 1.0) ** (1.0 / safe)
+    k_log = jnp.exp(u * jnp.log(n))
+    k = jnp.where(near1, k_log, k_pow)
+    return jnp.clip(k.astype(jnp.int32) - 1, 0, n_pages - 1)
+
+
+def _burst_times(u, idx, p: WorkloadParams):
+    """Arrival clock: one exponential gap (mean ``interarrival * burst``)
+    at each burst boundary, zero within — the cumsum replaces the numpy
+    model's carried ``t`` accumulator.  Returns f32 ticks."""
+    burst = jnp.maximum(p.burst, 1)
+    gap = -jnp.log1p(-jnp.minimum(u, 0.999999)) \
+        * p.interarrival * burst.astype(jnp.float32)
+    gap = jnp.where(jnp.remainder(idx, burst) == 0, gap, 0.0)
+    return jnp.cumsum(gap)
+
+
+# ---------------------------------------------------------------------------
+# scenario families: (key, params-scalars, per_core) -> (t, page, col, wr)
+# ---------------------------------------------------------------------------
+
+def _gen_zipf_reuse(key, p: WorkloadParams, n: int):
+    """Device port of the §7 application model (``traces.gen_core_stream``).
+
+    Mutable state -> parallel structure:
+     * random live context per request        -> per-request draw;
+     * geometric visit lengths per context    -> Bernoulli(1/visit_mean)
+       "new visit" marks + per-context ``cumsum`` visit ids (the one-hot
+       prefix trick; ``MAX_CONTEXTS`` is the static ceiling);
+     * page of a visit (window slot + cursor) -> draws keyed on
+       (context, visit) and (slot, generation);
+     * sliding working-set window w/ refresh  -> slot s regenerates every
+       ``window/refresh`` requests, staggered by slot, so the window turns
+       over at the numpy model's rate without carried window state.
+    """
+    idx = jnp.arange(n, dtype=jnp.int32)
+    u = _uniforms(key, n, 0, 5)     # ctx, visit-start, hot-seg, write, gap
+    ctx = jnp.minimum((u[:, 0] * p.contexts).astype(jnp.int32),
+                      p.contexts - 1)
+    # the oracle's visit length is 1 + geometric(1/visit_mean): mean
+    # 1 + visit_mean, so a request opens a new visit with that reciprocal
+    start = u[:, 1] < 1.0 / (1.0 + jnp.maximum(p.visit_mean, 0.0))
+
+    onehot = ctx[:, None] == jnp.arange(MAX_CONTEXTS, dtype=jnp.int32)[None]
+    pick = lambda m: jnp.take_along_axis(m, ctx[:, None], axis=1)[:, 0]
+    visit = pick(jnp.cumsum((start[:, None] & onehot).astype(jnp.int32), 0))
+    r_mat = jnp.cumsum(onehot.astype(jnp.int32), axis=0)
+    r = pick(r_mat)
+    start_r = pick(jax.lax.cummax(
+        jnp.where(start[:, None] & onehot, r_mat, -1), axis=0))
+    off = jnp.where(start_r < 0, r - 1, r - start_r)  # position within visit
+
+    # visit-level draws (constant across the visit's requests), keyed on
+    # the unique id visit * MAX_CONTEXTS + ctx
+    v = _id_uniforms(key, visit * MAX_CONTEXTS + ctx, 1, 4)
+    v_stream, v_sweep, v_slot, v_col = v[:, 0], v[:, 1], v[:, 2], v[:, 3]
+
+    # working-set window: slot s holds one zipf draw per generation g;
+    # each slot regenerates every E requests (staggered), E = window/refresh
+    epoch = jnp.maximum(
+        (p.window.astype(jnp.float32) / jnp.maximum(p.refresh, 1e-4))
+        .astype(jnp.int32), 1)
+    window = jnp.maximum(p.window, 1)
+    slot = jnp.where(v_sweep < 0.7,                       # coherent sweep
+                     jnp.remainder(visit, window),
+                     jnp.minimum((v_slot * window).astype(jnp.int32),
+                                 window - 1))
+    gen_id = (idx + slot * (epoch // window)) // epoch
+    page_reuse = _zipf_from_u(
+        _id_uniforms(key, gen_id * 65536 + slot, 2, 1)[:, 0],
+        p.n_pages, p.zipf_a)
+
+    # streaming visits: fresh pages outside the reuse set, never revisited
+    streaming = v_stream < p.stream_frac
+    page = jnp.where(
+        streaming,
+        p.n_pages + jnp.remainder(visit * MAX_CONTEXTS + ctx, 1 << 20),
+        page_reuse)
+
+    # 1-2 hot segments per page + within-visit column rotation (traces.py)
+    prim = jnp.remainder(page * 97, SPR)
+    sec = jnp.remainder(prim + 1 + jnp.remainder(page * 31, SPR - 1), SPR)
+    seg = jnp.where(streaming | (p.hot_segs == 1) | (u[:, 2] < 0.8),
+                    prim, sec)
+    start_col = jnp.minimum((v_col * SEG16).astype(jnp.int32), SEG16 - 1)
+    col = seg * SEG16 + jnp.remainder(start_col + off, SEG16)
+    return _burst_times(u[:, 4], idx, p), page, col, u[:, 3] < p.rw
+
+
+def _gen_stream(key, p: WorkloadParams, n: int):
+    """Sequential streaming sweep: rows visited in order, the first
+    ``touch_segs`` segments of each row walked block by block.  High row
+    locality the open-row buffer already captures — the pattern where
+    in-DRAM caching cannot help (reuse distance ~ the whole sweep)."""
+    idx = jnp.arange(n, dtype=jnp.int32)
+    u = _uniforms(key, n, 0, 2)   # write, gap
+    per_row = jnp.maximum(p.touch_segs, 1) * SEG16
+    page = jnp.remainder(idx // per_row, 4 * p.n_pages)  # long cold sweep
+    col = jnp.remainder(idx, per_row)
+    return _burst_times(u[:, 1], idx, p), page, col, u[:, 0] < p.rw
+
+
+def _gen_stride(key, p: WorkloadParams, n: int):
+    """Strided/blocked sweep: every visit jumps ``stride`` rows (mod the
+    ``n_pages`` block) and touches ``touch_segs`` segments spread across
+    the row — fixed-distance reuse with partial row footprint, the
+    blocked-algorithm phase pattern."""
+    idx = jnp.arange(n, dtype=jnp.int32)
+    u = _uniforms(key, n, 0, 2)
+    touches = jnp.maximum(p.touch_segs, 1)
+    k = idx // touches
+    page = jnp.remainder(k * p.stride, p.n_pages)
+    seg = jnp.remainder(idx, touches) * (SPR // jnp.minimum(touches, SPR))
+    col = jnp.minimum(seg, SPR - 1) * SEG16 + jnp.remainder(k, SEG16)
+    return _burst_times(u[:, 1], idx, p), page, col, u[:, 0] < p.rw
+
+
+def _gen_pointer_chase(key, p: WorkloadParams, n: int):
+    """Dependent-load chain: each step lands on a uniform-random node of an
+    ``n_pages``-row pool; a node is one fixed block of its row.  Issue
+    spacing (``interarrival`` ~ memory latency, burst 1, one context)
+    carries the serialization — the low-BLP latency-bound regime."""
+    idx = jnp.arange(n, dtype=jnp.int32)
+    u = _uniforms(key, n, 0, 3)   # node, write, gap
+    page = jnp.minimum((u[:, 0] * p.n_pages.astype(jnp.float32))
+                       .astype(jnp.int32), p.n_pages - 1)
+    col = jnp.remainder(page * 97, SPR) * SEG16 + jnp.remainder(page * 53,
+                                                                SEG16)
+    return _burst_times(u[:, 2], idx, p), page, col, u[:, 1] < p.rw
+
+
+def _gen_embed(key, p: WorkloadParams, n: int):
+    """Embedding-lookup / hash-join probe: iid bounded-Zipf row draws
+    (high skew, no windowing), one hot segment per row (the embedding
+    vector), gathers issued ``burst`` back-to-back — the ``figkv/``
+    access pattern.  Hot rows recur constantly; 7/8 of every activated
+    row is dead weight — FIGCache's best case."""
+    idx = jnp.arange(n, dtype=jnp.int32)
+    u = _uniforms(key, n, 0, 4)   # page, in-vector col, write, gap
+    page = _zipf_from_u(u[:, 0], p.n_pages, p.zipf_a)
+    col = jnp.remainder(page * 97, SPR) * SEG16 \
+        + jnp.minimum((u[:, 1] * SEG16).astype(jnp.int32), SEG16 - 1)
+    return _burst_times(u[:, 3], idx, p), page, col, u[:, 2] < p.rw
+
+
+def _gen_phase_mix(key, p: WorkloadParams, n: int):
+    """Alternating phases: even ``phase_len`` windows replay the
+    zipf_reuse model, odd windows stream — the phase-switching pattern
+    that stresses insertion/eviction churn (caching must re-learn the hot
+    set at every boundary)."""
+    idx = jnp.arange(n, dtype=jnp.int32)
+    tz, pz, cz, wz = _gen_zipf_reuse(jax.random.fold_in(key, 11), p, n)
+    ts, ps, cs, ws = _gen_stream(jax.random.fold_in(key, 12), p, n)
+    streamy = jnp.remainder(idx // jnp.maximum(p.phase_len, 1), 2) == 1
+    # select gaps per phase, then re-accumulate the clock
+    gz = jnp.diff(tz, prepend=0.0)
+    gs = jnp.diff(ts, prepend=0.0)
+    t = jnp.cumsum(jnp.where(streamy, gs, gz))
+    return (t, jnp.where(streamy, ps + p.n_pages * 4, pz),
+            jnp.where(streamy, cs, cz), jnp.where(streamy, ws, wz))
+
+
+_FAMILY_FNS = {
+    "zipf_reuse": _gen_zipf_reuse,
+    "stream": _gen_stream,
+    "stride": _gen_stride,
+    "pointer_chase": _gen_pointer_chase,
+    "embed": _gen_embed,
+    "phase_mix": _gen_phase_mix,
+}
+
+
+# ---------------------------------------------------------------------------
+# channel assembly (shared by every family)
+# ---------------------------------------------------------------------------
+
+def _assemble(streams, n_channels: int, per_channel: int,
+              geom: DRAMGeometry) -> Trace:
+    """Merge per-core streams into per-channel, time-sorted ``Trace`` rows.
+
+    The device analogue of ``traces.build_trace``'s host loop: the same
+    multiplicative address hash spreads pages over channels/banks/rows
+    (uint32 modular arithmetic — statistically equivalent to the numpy
+    int64 hash), each channel argsorts its own requests by arrival and
+    keeps the first ``per_channel``; an under-filled channel completes
+    with no-op sentinel requests (``dram.NOOP_ISSUE``), never duplicated
+    real ones, so per-channel stats stay honest and the sorted-issue-time
+    / no-op-suffix invariants hold by construction."""
+    t, page, col, wr = streams
+    n_cores = t.shape[0]
+    core = jnp.broadcast_to(
+        jnp.arange(n_cores, dtype=jnp.int32)[:, None], t.shape)
+    phys = (page + core * 100003).astype(jnp.uint32)
+    ch = (phys * jnp.uint32(2654435761)) >> 8
+    ch = (ch % jnp.uint32(n_channels)).astype(jnp.int32)
+    bank = ((phys * jnp.uint32(2246822519)) >> 12) % jnp.uint32(geom.n_banks)
+    row = (phys * jnp.uint32(40503)) % jnp.uint32(geom.n_rows)
+    flat = lambda x: x.reshape(-1)
+    t, ch, bank, row, col, wr, core = (
+        flat(t), flat(ch), flat(bank.astype(jnp.int32)),
+        flat(row.astype(jnp.int32)), flat(col), flat(wr), flat(core))
+    # clamp the arrival clock strictly below the no-op sentinel.  The bound
+    # must be float32-representable: the ulp at 2**30 is 64, so NOOP_ISSUE-64
+    # is exact, whereas NOOP_ISSUE-2 would round UP to the sentinel itself
+    # and silently convert late real requests into no-ops
+    t = jnp.minimum(t, jnp.float32(NOOP_ISSUE - 64))
+
+    # one stable (channel, time) sort serves every channel: channel c's
+    # requests are the contiguous slice [starts[c], starts[c] + counts[c])
+    # in time order; each channel keeps its first per_channel
+    order = jnp.lexsort((t, ch))
+    counts = jnp.bincount(ch, length=n_channels)
+    starts = jnp.cumsum(counts) - counts
+    j = jnp.arange(per_channel, dtype=jnp.int32)
+    src = order[jnp.minimum(starts[:, None] + j[None, :], t.size - 1)]
+    valid = j[None, :] < counts[:, None]                 # (C, per_channel)
+    g = lambda x, fill: jnp.where(valid, x[src], fill)
+    return Trace(t_issue=jnp.where(valid, t[src].astype(jnp.int32),
+                                   NOOP_ISSUE),
+                 bank=g(bank, 0), row=g(row, 0), col=g(col, 0),
+                 is_write=g(wr, False), core=g(core, 0))
+
+
+# ---------------------------------------------------------------------------
+# compiled entry points
+# ---------------------------------------------------------------------------
+
+def _make_gen(family: str, n_cores: int, n_channels: int, per_channel: int,
+              geom: DRAMGeometry):
+    """The un-jitted generator of one static structure.  Over-generates
+    30 % + 2048 per core over the per-channel quota so channel truncation
+    has slack for hash imbalance (far leaner than the numpy path's
+    ~per_channel-per-core margin; a channel that still under-fills
+    completes with no-ops, same as the oracle's tail handling)."""
+    total = n_channels * per_channel
+    per_core = (13 * total // 10) // n_cores + 2048
+    fam = _FAMILY_FNS[family]
+
+    def gen(params: WorkloadParams, seed) -> Trace:
+        GEN_TRACE_LOG.append(
+            f"gen/{family}/{n_cores}x{n_channels}x{per_channel}")
+        key = jax.random.PRNGKey(seed)
+        keys = jax.vmap(lambda c: jax.random.fold_in(key, c))(
+            jnp.arange(n_cores, dtype=jnp.int32))
+        streams = jax.vmap(lambda k, p: fam(k, p, per_core))(keys, params)
+        return _assemble(streams, n_channels, per_channel, geom)
+
+    return gen
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_gen(family: str, n_cores: int, n_channels: int,
+                  per_channel: int, geom: DRAMGeometry = GEOM):
+    return jax.jit(_make_gen(family, n_cores, n_channels, per_channel, geom))
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_gen_batch(family: str, n_cores: int, n_channels: int,
+                        per_channel: int, geom: DRAMGeometry = GEOM):
+    """W workloads of one static structure as one vmapped program:
+    params leaves ``(W, n_cores)``, seeds ``(W,)`` -> Trace ``(W, C, T)``."""
+    return jax.jit(jax.vmap(
+        _make_gen(family, n_cores, n_channels, per_channel, geom)))
+
+
+def generate(spec: WorkloadSpec, geom: DRAMGeometry = GEOM) -> Trace:
+    """Materialize one workload on device: ``Trace`` leaves ``(C, T)``."""
+    fn = _compiled_gen(spec.family, spec.n_cores, spec.n_channels,
+                       spec.per_channel, geom)
+    return fn(spec.params(), jnp.int32(spec.seed))
+
+
+def generate_many(specs: Sequence[WorkloadSpec],
+                  geom: DRAMGeometry = GEOM) -> List[Trace]:
+    """Generate a workload grid: specs sharing a static structure batch
+    into ONE vmapped compiled call (knobs stacked ``(W, n_cores)``, seeds
+    ``(W,)``) — the workload analogue of ``dram.run_sweep``.  Returns
+    per-spec traces in input order."""
+    groups: Dict[object, List[int]] = {}
+    for i, s in enumerate(specs):
+        groups.setdefault(s.static_key, []).append(i)
+    out: List[Trace | None] = [None] * len(specs)
+    for key, idxs in groups.items():
+        family, n_cores, n_channels, per_channel = key
+        if len(idxs) == 1:
+            out[idxs[0]] = generate(specs[idxs[0]], geom)
+            continue
+        fn = _compiled_gen_batch(family, n_cores, n_channels, per_channel,
+                                 geom)
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *[specs[i].params() for i in idxs])
+        seeds = jnp.array([specs[i].seed for i in idxs], jnp.int32)
+        trs = fn(batch, seeds)
+        for j, i in enumerate(idxs):
+            out[i] = jax.tree.map(lambda a, j=j: a[j], trs)
+    return out

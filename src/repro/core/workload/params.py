@@ -1,0 +1,256 @@
+"""Workload parameterization: the static/traced split for trace synthesis.
+
+Mirrors the ``StaticConfig`` / ``MechParams`` discipline of ``core/timing.py``
+(DESIGN.md §3), applied to *workloads* (DESIGN.md §11):
+
+ * ``WorkloadSpec`` — the static half: scenario family (a trace-time branch
+   of the generator), core count and trace shape (``n_channels`` x
+   ``per_channel``), and the per-core knob tuple.  Hashable; one compiled
+   generator per distinct ``(family, n_cores, n_channels, per_channel)``.
+ * ``WorkloadParams`` — the traced half: every numeric knob as a scalar
+   jax leaf.  A spec packs one value per core (leaves shaped ``(n_cores,)``)
+   and ``generators.generate_many`` vmaps a further workload axis
+   ``(W, n_cores)`` — exactly how ``MechParams`` batches config grids.
+
+``content_hash`` is the cache key discipline for anything derived from a
+workload description (benchmark trace caches, ``benchmarks/common.py``):
+a stable digest of the *contents* of specs/dataclasses/tuples, so two
+descriptions that build the same trace share a cache entry and two
+different ones can never collide on tuple identity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import traces
+from repro.core.timing import GEOM, TICKS_PER_NS
+
+# Scenario families (generators.py implements one branch per name):
+#  * zipf_reuse    — the ported §7 application model (windowed bounded-Zipf
+#                    popularity, hot row segments, MSHR-interleaved visits);
+#  * stream        — sequential streaming sweep (high row locality, the
+#                    pattern in-DRAM caching cannot help);
+#  * stride        — strided/blocked sweep (fixed-distance reuse, partial
+#                    row footprint);
+#  * pointer_chase — dependent-load chain (low BLP, latency-bound);
+#  * embed         — embedding-lookup / hash-join probe (high-skew iid
+#                    random, one hot segment per row — matches ``figkv/``);
+#  * phase_mix     — alternating zipf_reuse/stream phases.
+FAMILIES = ("zipf_reuse", "stream", "stride", "pointer_chase", "embed",
+            "phase_mix")
+
+# Generator column granularity: 16 blocks per generator segment, matching
+# the §3 observation unit of core/traces.py (hot_segs counts these).
+SEG16 = 16
+SPR = GEOM.row_blocks // SEG16      # generator segments per row (8)
+MAX_CONTEXTS = 8                    # static ceiling of the traced `contexts`
+
+
+class WorkloadParams(NamedTuple):
+    """Traced half of a workload: one scalar leaf per knob.
+
+    ``WorkloadSpec.params()`` stacks these per core (leaves ``(n_cores,)``);
+    ``generators.generate_many`` adds a workload axis ``(W, n_cores)``.
+    Unused knobs are inert for families that do not read them, so one
+    pytree shape serves every family and cross-family grids still stack.
+    """
+    n_pages: jax.Array       # i32 reuse working set, in DRAM rows
+    zipf_a: jax.Array        # f32 popularity skew (zipf_reuse / embed)
+    visit_mean: jax.Array    # f32 accesses per row visit
+    hot_segs: jax.Array      # i32 hot generator-segments per page (1|2)
+    rw: jax.Array            # f32 write fraction
+    interarrival: jax.Array  # f32 mean burst gap, in ticks
+    contexts: jax.Array      # i32 live miss streams (<= MAX_CONTEXTS)
+    burst: jax.Array         # i32 back-to-back requests per episode
+    window: jax.Array        # i32 active working-set window, in pages
+    refresh: jax.Array       # f32 per-request window-turnover probability
+    stream_frac: jax.Array   # f32 fraction of streaming (no-reuse) visits
+    stride: jax.Array        # i32 row stride (stride family)
+    touch_segs: jax.Array    # i32 segments touched per row visit
+    phase_len: jax.Array     # i32 requests per phase (phase_mix)
+
+
+@dataclasses.dataclass(frozen=True)
+class CoreWorkload:
+    """One core's workload knobs (the numeric content of a spec).
+
+    A superset of ``traces.AppParams``: the shared fields carry the same
+    meaning (``spec_from_apps`` copies them 1:1), the extras parameterize
+    the synthetic families.  ``mpki`` feeds the IPC model only
+    (``simulator._results_from_counters_batch``), never the trace itself.
+    """
+    name: str = "syn"
+    mpki: float = 25.0
+    n_pages: int = 2048
+    zipf_a: float = 1.1
+    visit_mean: float = 1.6
+    hot_segs: int = 1
+    rw: float = 0.25
+    interarrival_ns: float = 30.0
+    contexts: int = 4
+    burst: int = 3
+    window: int = 48
+    refresh: float = 0.02
+    stream_frac: float = 0.2
+    stride: int = 17
+    touch_segs: int = 1
+    phase_len: int = 1024
+
+    def __post_init__(self):
+        assert 1 <= self.contexts <= MAX_CONTEXTS, self.contexts
+        assert self.burst >= 1 and self.window >= 1 and self.n_pages >= 2
+        assert 1 <= self.touch_segs <= SPR, self.touch_segs
+
+    @classmethod
+    def from_app(cls, app: traces.AppParams) -> "CoreWorkload":
+        """Port one Table-2 application (the numpy oracle's knob tuple)."""
+        return cls(name=app.name, mpki=app.mpki, n_pages=app.n_pages,
+                   zipf_a=app.zipf_a, visit_mean=app.visit_mean,
+                   hot_segs=app.hot_segs, rw=app.rw,
+                   interarrival_ns=app.interarrival_ns,
+                   contexts=app.contexts, burst=app.burst, window=app.window,
+                   refresh=app.refresh, stream_frac=app.stream_frac)
+
+    def app(self) -> traces.AppParams:
+        """The ``AppParams`` view (what the IPC/energy model consumes)."""
+        return traces.AppParams(
+            name=self.name, mpki=self.mpki, n_pages=self.n_pages,
+            zipf_a=self.zipf_a, visit_mean=self.visit_mean,
+            hot_segs=self.hot_segs, rw=self.rw,
+            interarrival_ns=self.interarrival_ns, contexts=self.contexts,
+            burst=self.burst, window=self.window, refresh=self.refresh,
+            stream_frac=self.stream_frac)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """Static half of a workload: family branch + shape + per-core knobs.
+
+    Hashable and tiny — the workload analogue of ``timing.StaticConfig``.
+    Specs sharing ``static_key`` share ONE compiled generator; their knob
+    differences travel traced through ``params()``.
+    """
+    family: str
+    cores: Tuple[CoreWorkload, ...]
+    n_channels: int = 4
+    per_channel: int = 4096
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.family in FAMILIES, self.family
+        assert 1 <= len(self.cores) <= GEOM.n_cores
+        assert self.n_channels >= 1 and self.per_channel >= 1
+
+    @property
+    def n_cores(self) -> int:
+        return len(self.cores)
+
+    @property
+    def static_key(self):
+        """What determines the compiled generator (shapes + branches)."""
+        return (self.family, self.n_cores, self.n_channels, self.per_channel)
+
+    def params(self) -> WorkloadParams:
+        """Stack the per-core knobs into ``(n_cores,)`` traced leaves."""
+        i32 = lambda f: jnp.array([int(getattr(c, f)) for c in self.cores],
+                                  jnp.int32)
+        f32 = lambda f: jnp.array([float(getattr(c, f)) for c in self.cores],
+                                  jnp.float32)
+        return WorkloadParams(
+            n_pages=i32("n_pages"), zipf_a=f32("zipf_a"),
+            visit_mean=f32("visit_mean"), hot_segs=i32("hot_segs"),
+            rw=f32("rw"),
+            interarrival=jnp.array(
+                [c.interarrival_ns * TICKS_PER_NS for c in self.cores],
+                jnp.float32),
+            contexts=i32("contexts"), burst=i32("burst"),
+            window=i32("window"), refresh=f32("refresh"),
+            stream_frac=f32("stream_frac"), stride=i32("stride"),
+            touch_segs=i32("touch_segs"), phase_len=i32("phase_len"))
+
+    def apps(self) -> Tuple[traces.AppParams, ...]:
+        """Per-core ``AppParams`` for the IPC/energy model."""
+        return tuple(c.app() for c in self.cores)
+
+    def content_hash(self) -> str:
+        return content_hash(self)
+
+
+# Family presets: the knob tuples the scenario benchmarks and the
+# ``--scenario`` quickstart flag use.  Synthetic names are not in
+# ``traces.INTENSIVE``, so the IPC model applies the conservative MLP.
+_PRESET_CORES = {
+    "zipf_reuse": CoreWorkload(name="syn-zipf", mpki=25.0),
+    "stream": CoreWorkload(name="syn-stream", mpki=40.0, touch_segs=SPR,
+                           rw=0.3, interarrival_ns=12.0, burst=4,
+                           n_pages=4096),
+    "stride": CoreWorkload(name="syn-stride", mpki=25.0, stride=17,
+                           touch_segs=2, rw=0.2, interarrival_ns=25.0,
+                           n_pages=1024),
+    "pointer_chase": CoreWorkload(name="syn-ptr", mpki=30.0, n_pages=8192,
+                                  rw=0.05, interarrival_ns=90.0, burst=1,
+                                  contexts=1),
+    "embed": CoreWorkload(name="syn-embed", mpki=45.0, n_pages=4096,
+                          zipf_a=1.2, rw=0.05, interarrival_ns=8.0,
+                          burst=8, contexts=8),
+    "phase_mix": CoreWorkload(name="syn-phase", mpki=30.0, touch_segs=SPR,
+                              phase_len=1024, interarrival_ns=20.0),
+}
+
+
+def preset(family: str, n_cores: int = 8, n_channels: int = 4,
+           per_channel: int = 4096, seed: int = 0, **overrides
+           ) -> WorkloadSpec:
+    """A ready-to-generate spec for one scenario family."""
+    core = dataclasses.replace(_PRESET_CORES[family], **overrides)
+    return WorkloadSpec(family=family, cores=(core,) * n_cores,
+                        n_channels=n_channels, per_channel=per_channel,
+                        seed=seed)
+
+
+def spec_from_apps(apps, n_channels: int, per_channel: int,
+                   seed: int = 0) -> WorkloadSpec:
+    """Port a numpy-oracle workload (list of ``AppParams``, one per core)
+    to the device zipf_reuse family — same knobs, device generation."""
+    return WorkloadSpec(
+        family="zipf_reuse",
+        cores=tuple(CoreWorkload.from_app(a) for a in apps),
+        n_channels=n_channels, per_channel=per_channel, seed=seed)
+
+
+def _feed(h, obj) -> None:
+    """Canonical recursive serialization for ``content_hash``."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        h.update(type(obj).__name__.encode())
+        for f in dataclasses.fields(obj):
+            h.update(f.name.encode())
+            _feed(h, getattr(obj, f.name))
+    elif isinstance(obj, dict):
+        h.update(b"{")
+        for k in sorted(obj):
+            _feed(h, k)
+            _feed(h, obj[k])
+        h.update(b"}")
+    elif isinstance(obj, (tuple, list)):
+        h.update(b"(")
+        for x in obj:
+            _feed(h, x)
+        h.update(b")")
+    else:
+        h.update(repr(obj).encode())
+        h.update(b";")
+
+
+def content_hash(obj) -> str:
+    """Stable digest of a workload description's *contents* (specs, app
+    tuples, plain numbers...) — the benchmark-cache key discipline: equal
+    content shares an entry, different content can never collide the way
+    positional tuple keys silently can."""
+    h = hashlib.sha1()
+    _feed(h, obj)
+    return h.hexdigest()

@@ -14,8 +14,9 @@ import pytest
 EXAMPLES = pathlib.Path(__file__).resolve().parent.parent / "examples"
 
 
-def _run(name, monkeypatch, capsys):
+def _run(name, monkeypatch, capsys, argv=()):
     monkeypatch.setenv("REPRO_EXAMPLE_REQS", "256")
+    monkeypatch.setattr("sys.argv", [name, *argv])
     runpy.run_path(str(EXAMPLES / name), run_name="__main__")
     return capsys.readouterr().out
 
@@ -24,6 +25,15 @@ def test_quickstart_smoke(monkeypatch, capsys):
     out = _run("quickstart.py", monkeypatch, capsys)
     assert "[1] mcf speedup" in out
     assert "[2] FIGARO reloc" in out and "OK" in out
+    assert "[3] qwen2-7b" in out
+
+
+def test_quickstart_scenario_smoke(monkeypatch, capsys):
+    """``--scenario`` drives layer 1 with a device-generated workload
+    (DESIGN.md §11) instead of the numpy mcf trace."""
+    out = _run("quickstart.py", monkeypatch, capsys,
+               argv=["--scenario", "embed"])
+    assert "[1] scenario=embed speedup" in out
     assert "[3] qwen2-7b" in out
 
 

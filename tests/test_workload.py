@@ -1,0 +1,299 @@
+"""Workload engine tests (DESIGN.md §11): generator contracts, statistical
+property checks per scenario family, device-vs-numpy-oracle distribution
+checks for the ported application model, and the integration/caching
+satellites (spec-accepting ``sweep_traces``, content-hash keys, the
+``build_trace`` no-op tail fix)."""
+import functools
+
+import numpy as np
+import pytest
+
+from repro.core import dram, simulator, traces, workload
+from repro.core.timing import GEOM, paper_config
+
+# small-but-significant shapes: 2 cores x 2 channels x 2048 requests
+SMALL = dict(n_cores=2, n_channels=2, per_channel=2048)
+
+
+@functools.lru_cache(maxsize=None)
+def _spec(family: str, seed: int = 3, **overrides):
+    return workload.preset(family, seed=seed, **{**SMALL, **overrides})
+
+
+@functools.lru_cache(maxsize=None)
+def _trace(family: str, seed: int = 3, **overrides):
+    return workload.generate(_spec(family, seed, **overrides))
+
+
+@functools.lru_cache(maxsize=None)
+def _profile(family: str, seed: int = 3, **overrides):
+    return workload.characterize(_trace(family, seed, **overrides))
+
+
+# ---------------------------------------------------------------------------
+# generator contract: every family emits a well-formed device trace
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", workload.FAMILIES)
+def test_trace_well_formed(family):
+    tr = _trace(family)
+    t = np.asarray(tr.t_issue)
+    assert t.shape == (SMALL["n_channels"], SMALL["per_channel"])
+    assert t.dtype == np.int32
+    for c in range(t.shape[0]):
+        assert (np.diff(t[c]) >= 0).all(), "t_issue must be sorted"
+        real = t[c] < dram.NOOP_ISSUE
+        # no-ops only as a suffix, and never more than the hash-imbalance
+        # slack (the generator over-provisions 30 %)
+        assert real[: real.sum()].all(), "no-op padding must be a suffix"
+        assert real.mean() > 0.9, "channels should fill from the margin"
+    assert np.asarray(tr.bank).min() >= 0
+    assert np.asarray(tr.bank).max() < GEOM.n_banks
+    assert np.asarray(tr.row).min() >= 0
+    assert np.asarray(tr.row).max() < GEOM.n_rows
+    assert np.asarray(tr.col).min() >= 0
+    assert np.asarray(tr.col).max() < GEOM.row_blocks
+    assert np.asarray(tr.core).max() < SMALL["n_cores"]
+    assert np.asarray(tr.is_write).dtype == bool
+
+
+@pytest.mark.parametrize("family", workload.FAMILIES)
+def test_write_fraction_targets_params(family):
+    spec, prof = _spec(family), _profile(family)
+    assert abs(prof["write_frac"] - spec.cores[0].rw) < 0.05
+
+
+@pytest.mark.parametrize("family", workload.FAMILIES)
+def test_interarrival_targets_params(family):
+    """Arrival intensity (MPKI's trace-side face) tracks the knob: the
+    mean per-channel gap is the per-core mean over the channel fan-in."""
+    spec, prof = _spec(family), _profile(family)
+    core = spec.cores[0]
+    expect = core.interarrival_ns * spec.n_cores / spec.n_channels
+    assert 0.5 * expect < prof["interarrival_ns_mean"] < 2.0 * expect
+
+
+def test_generation_is_deterministic():
+    a, b = workload.generate(_spec("embed")), workload.generate(_spec("embed"))
+    for name, x, y in zip(a._fields, a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), name
+
+
+def test_seed_changes_trace():
+    a = np.asarray(_trace("embed", seed=3).row)
+    b = np.asarray(_trace("embed", seed=4).row)
+    assert not np.array_equal(a, b)
+
+
+def test_one_compiled_generator_per_structure():
+    """Knob changes must not retrace: the generator compiles per
+    ``static_key`` only (the workload mirror of DESIGN.md §3)."""
+    workload.generate(_spec("stride"))                    # warm
+    before = workload.gen_trace_count()
+    workload.generate(_spec("stride", seed=9, stride=29, rw=0.4))
+    assert workload.gen_trace_count() == before
+
+
+# ---------------------------------------------------------------------------
+# statistical property tests per family
+# ---------------------------------------------------------------------------
+
+def test_zipf_tail_exponent():
+    """The embed family's page popularity must follow the spec's bounded
+    Zipf: the log-log rank-frequency slope over the head of the
+    distribution recovers ~ -zipf_a."""
+    spec = _spec("embed", per_channel=8192, n_channels=1, n_cores=1)
+    tr = workload.generate(spec)
+    t = np.asarray(tr.t_issue)[0]
+    rows = np.asarray(tr.row)[0][t < dram.NOOP_ISSUE]
+    freq = np.sort(np.bincount(rows))[::-1]
+    top = freq[: max((freq > 4).sum(), 10)].astype(float)  # resolved head
+    k = np.arange(1, top.size + 1, dtype=float)
+    slope = np.polyfit(np.log(k), np.log(top), 1)[0]
+    assert abs(-slope - spec.cores[0].zipf_a) < 0.35, slope
+
+
+def test_stream_footprint_high():
+    """A full-row stream (touch_segs=8) touches most of each row it
+    activates: lifetime footprint ~ 1, long same-row runs, high row-hit
+    potential — the regime in-DRAM caching cannot improve."""
+    prof = workload.characterize(
+        workload.generate(_spec("stream", n_cores=1, n_channels=1)))
+    assert prof["life_footprint_mean"] > 0.9
+    assert prof["row_hit_potential"] > 0.9
+    assert prof["visit_len_mean"] > 20
+
+
+def test_stream_partial_footprint_scales_with_touch_segs():
+    prof = workload.characterize(workload.generate(
+        _spec("stream", n_cores=1, n_channels=1, touch_segs=1)))
+    assert prof["life_footprint_mean"] < 0.2      # 1 of 8 segments
+
+
+def test_stride_fixed_distance_reuse():
+    """The blocked sweep revisits each row of its block at a fixed
+    distance with a partial (touch_segs/8) footprint."""
+    spec = _spec("stride", n_cores=1, n_channels=1)
+    prof = workload.characterize(workload.generate(spec))
+    assert prof["life_footprint_mean"] < 0.5
+    rows = np.asarray(workload.generate(spec).row)[0]
+    assert np.unique(rows).size <= spec.cores[0].n_pages + 1
+
+
+def test_pointer_chase_latency_bound():
+    """One context, burst 1: the chain's seriality is *temporal* — arrival
+    gaps sit at the latency-scale knob — while each node is a cold random
+    row (no spatial runs).  The popularity skew contrast with embed shows
+    up as bank concentration: zipf-hot embedding rows pin a few banks,
+    the uniform chain spreads evenly."""
+    prof = _profile("pointer_chase")
+    assert prof["interarrival_ns_mean"] > 25.0      # 90 ns / (8c / 2ch) * tol
+    assert prof["visit_len_mean"] < 2.0             # no spatial runs
+    assert _profile("embed")["blp_mean"] < prof["blp_mean"]
+
+
+def test_embed_one_hot_segment_per_row():
+    """Embedding rows expose exactly one hot segment — footprint pins to
+    1/8: FIGCache's best-case waste ratio (paper §3)."""
+    prof = _profile("embed")
+    assert abs(prof["visit_footprint_mean"] - 1 / 8) < 0.02
+    assert abs(prof["life_footprint_mean"] - 1 / 8) < 0.02
+
+
+def test_phase_mix_interpolates():
+    """Alternating phases land the mix's footprint and row-hit stats
+    between the pure zipf and pure stream end points."""
+    mix = _profile("phase_mix")
+    zipf, stream = _profile("zipf_reuse"), _profile("stream")
+    lo, hi = sorted((zipf["row_hit_potential"], stream["row_hit_potential"]))
+    assert lo - 0.05 < mix["row_hit_potential"] < hi + 0.05
+    assert mix["life_footprint_mean"] > zipf["life_footprint_mean"]
+
+
+# ---------------------------------------------------------------------------
+# device vs numpy oracle (the ported application model)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _oracle_pair(n_channels=2, per_channel=4096, seed=5):
+    apps = [traces.app_params(n) for n in ("mcf", "libquantum")]
+    tr_np = traces.build_trace(apps, n_channels, per_channel, seed)
+    spec = workload.spec_from_apps(apps, n_channels, per_channel, seed=seed)
+    return (workload.characterize(tr_np),
+            workload.characterize(workload.generate(spec)))
+
+
+def test_zipf_reuse_matches_oracle_headline_stats():
+    """The device zipf_reuse port must reproduce the numpy oracle's
+    headline stats within tolerance (ISSUE 5 acceptance): row-hit
+    potential, per-visit footprint CDF, write fraction, visit length and
+    arrival scale."""
+    ref, dev = _oracle_pair()
+    assert abs(ref["row_hit_potential"] - dev["row_hit_potential"]) < 0.1
+    assert abs(ref["visit_footprint_mean"] - dev["visit_footprint_mean"]) \
+        < 0.05
+    assert abs(ref["life_footprint_mean"] - dev["life_footprint_mean"]) < 0.1
+    assert abs(ref["write_frac"] - dev["write_frac"]) < 0.05
+    cdf_gap = np.abs(np.asarray(ref["visit_footprint_cdf"])
+                     - np.asarray(dev["visit_footprint_cdf"])).max()
+    assert cdf_gap < 0.12, cdf_gap
+    assert 0.6 < dev["visit_len_mean"] / ref["visit_len_mean"] < 1.6
+    assert 0.5 < (dev["interarrival_ns_mean"]
+                  / ref["interarrival_ns_mean"]) < 2.0
+    assert 0.7 < dev["blp_mean"] / ref["blp_mean"] < 1.4
+
+
+def test_mechanism_ordering_on_device_trace():
+    """Figs 7/8 orderings must survive the trace source swap: on a
+    device-generated intensive app, FIGCache-Ideal >= FIGCache-Fast > 1,
+    and LL-DRAM beats Base (ISSUE 5 acceptance)."""
+    spec = workload.spec_from_apps([traces.app_params("mcf")], 1, 3072,
+                                   seed=1)
+    s = simulator.speedup_summary(simulator.run_scenario(
+        spec, mechanisms=("base", "figcache_fast", "figcache_ideal",
+                          "lldram")))
+    assert s["figcache_fast"] > 1.0
+    assert s["figcache_ideal"] >= s["figcache_fast"] - 1e-6
+    assert s["lldram"] > 1.0
+
+
+# ---------------------------------------------------------------------------
+# integration: specs as first-class sweep axes
+# ---------------------------------------------------------------------------
+
+def test_sweep_traces_accepts_specs_bitwise():
+    specs = [_spec("stream", per_channel=1024),
+             _spec("embed", per_channel=1024)]
+    cfgs = [paper_config("base"), paper_config("figcache_fast")]
+    got = simulator.sweep_traces(specs, cfgs)
+    ref = simulator.sweep_traces([workload.generate(s) for s in specs],
+                                 cfgs, [s.apps() for s in specs])
+    for w in range(len(specs)):
+        for i in range(len(cfgs)):
+            for name, x, y in zip(got[w][i].counters._fields,
+                                  got[w][i].counters, ref[w][i].counters):
+                assert np.array_equal(np.asarray(x), np.asarray(y)), \
+                    (w, i, name)
+
+
+def test_generate_many_batches_and_matches_single():
+    """A workload grid sharing one static structure must generate as one
+    vmapped program AND reproduce per-spec generation bitwise."""
+    specs = [_spec("embed", seed=s, per_channel=1024) for s in (1, 2)] + \
+            [_spec("embed", seed=1, per_channel=1024, zipf_a=1.4)]
+    singles = [workload.generate(s) for s in specs]     # warm singles
+    before = workload.gen_trace_count()
+    batched = workload.generate_many(specs)
+    assert workload.gen_trace_count() - before <= 1, \
+        "a same-structure grid must compile at most one batched generator"
+    for one, many in zip(singles, batched):
+        for name, x, y in zip(one._fields, one, many):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), name
+
+
+def test_content_hash_discipline():
+    """Equal content hashes equal; any knob/seed/shape change splits the
+    key — the benchmark-cache hardening contract."""
+    a = _spec("embed")
+    b = workload.preset("embed", seed=3, **SMALL)
+    assert a is not b and workload.content_hash(a) == workload.content_hash(b)
+    assert workload.content_hash(a) != workload.content_hash(
+        _spec("embed", seed=4))
+    assert workload.content_hash(a) != workload.content_hash(
+        _spec("embed", rw=0.06))
+    assert workload.content_hash(a) != workload.content_hash(_spec("stream"))
+    apps = tuple(traces.app_params(n) for n in ("mcf", "lbm"))
+    assert workload.content_hash((apps, 1024, 2)) == \
+        workload.content_hash((tuple(apps), 1024, 2))
+
+
+# ---------------------------------------------------------------------------
+# satellite: build_trace tail handling (no-op sentinel, not edge-duplicate)
+# ---------------------------------------------------------------------------
+
+def test_build_trace_underfill_pads_with_noops(monkeypatch):
+    """A channel that receives too few requests must be completed with
+    no-op sentinel requests — never by duplicating the last real request
+    (the old ``np.pad(mode="edge")`` bug skewed per-channel stats)."""
+    a = traces.app_params("libquantum")
+    orig = traces.gen_core_stream
+
+    def all_channel0(app, core, n_reqs, seed, n_channels):
+        return orig(app, core, n_reqs, seed, 1)        # every ch == 0
+    monkeypatch.setattr(traces, "gen_core_stream", all_channel0)
+    tr = traces.build_trace([a], 2, 256, seed=1)
+    t = np.asarray(tr.t_issue)
+    assert (t[1] == dram.NOOP_ISSUE).all(), "starved channel -> all no-ops"
+    assert (t[0] < dram.NOOP_ISSUE).all()
+    assert not np.asarray(tr.is_write)[1].any()
+    # the simulator retires the padding with zero effect
+    res = simulator.run_mechanism(tr, paper_config("figcache_fast"), (a,))
+    cnt = res.counters
+    assert int(np.asarray(cnt.reads)[1] + np.asarray(cnt.writes)[1]) == 0
+    assert int(np.asarray(cnt.t_end)[1]) == 0
+
+
+def test_build_trace_full_channels_unchanged():
+    """Without under-fill the tail fix is a no-op: all requests real."""
+    tr = traces.build_trace([traces.app_params("mcf")], 1, 512, seed=2)
+    assert (np.asarray(tr.t_issue) < dram.NOOP_ISSUE).all()
