@@ -55,15 +55,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from repro.analysis import contracts
 from repro.core import dram, traces, workload
 from repro.core.timing import paper_config, shared_static
 
-# 8 configs, one static structure: threshold x benefit_bits grid
-GRID = [dict(insert_threshold=th, benefit_bits=bb)
-        for th in (1, 2, 4, 8) for bb in (4, 5)]
-# fig 12 / fig 13 knobs — distinct grid sizes so each traces separately
-CAPACITY_GRID = [dict(cache_rows=cr) for cr in (2, 4, 8, 16, 32, 64)]
-SEGMENT_GRID = [dict(seg_blocks=sb) for sb in (8, 16, 32, 64, 128)]
+# Grids and jit budgets live in repro.analysis.contracts (the compile-
+# contract registry) so this benchmark and the analyzer can't drift apart;
+# the aliases keep the benchmark-side names stable.
+GRID = contracts.TIMINGS_GRID
+CAPACITY_GRID = contracts.CAPACITY_GRID
+SEGMENT_GRID = contracts.SEGMENT_GRID
 # the default fig-12 capacity grid: the hot-loop steps/sec workload
 HOTLOOP_GRID = [dict(cache_rows=cr) for cr in (4, 8, 16, 32, 64)]
 
@@ -288,7 +289,7 @@ def run():
         p = cfg.params()
         # params baked into the closure == one distinct compilation per
         # config point, exactly like the seed's make_step(cfg)
-        f = jax.jit(lambda t, p=p: dram.simulate(t, static, p))
+        f = jax.jit(lambda t, p=p: dram.simulate(t, static, p))  # repro: allow(jit-closure-cache)
         before.append(jax.block_until_ready(f(tr)))
     t_before = time.time() - t0
     jits_before = dram.jit_trace_count() - j0
@@ -313,9 +314,12 @@ def run():
     # scan per shape-changing grid — never one per shape point.  0 means an
     # earlier dispatch with matching (static, trace, batch) shapes was
     # reused (e.g. fig12's grid in a full run.py sweep), which is the same
-    # property in an even stronger form.
-    assert jits_capacity <= 1, f"capacity grid took {jits_capacity} jits"
-    assert jits_segment <= 1, f"segment grid took {jits_segment} jits"
+    # property in an even stronger form.  The budgets are the declared
+    # compile contracts (repro.analysis.contracts), shared with the
+    # analyzer CLI and the pytest gate.
+    contracts.assert_jit_budget("sweep.timings", jits_after)
+    contracts.assert_jit_budget("sweep.capacity", jits_capacity)
+    contracts.assert_jit_budget("sweep.segment", jits_segment)
 
     # ---- hot loop: fused vs dense steps/sec (DESIGN.md §9) ----------------
     hot = _hotloop_report(tr)

@@ -1,0 +1,50 @@
+"""Simulation sanitizer (DESIGN.md §12): three cooperating static passes.
+
+* ``lint`` — repo-idiom AST rules (masked reductions, static/traced split,
+  compile-cache hygiene, Pallas budgets);
+* ``jaxpr_audit`` — checks on the *traced* programs of the public compiled
+  entry points (x64/weak-type creep, int32 carry overflow under declared
+  trace-length bounds, callbacks/while/oversized-gather inside scans);
+* ``contracts`` — declarative fresh-compilation budgets verified by
+  running representative grids.
+
+One CLI: ``python -m repro.analysis`` (``--ci`` is the gate CI runs; JSON
+and SARIF artifacts via ``--json``/``--sarif``).
+"""
+from repro.analysis.findings import (ERROR, NOTE, WARNING, Finding, Report,
+                                     allowed_rules)
+
+__all__ = ["ERROR", "NOTE", "WARNING", "Finding", "Report",
+           "allowed_rules", "rule_index", "run_all"]
+
+
+def rule_index() -> dict:
+    """rule id -> short description across all three passes (SARIF rules)."""
+    from repro.analysis import contracts, jaxpr_audit, lint
+    out = dict(lint.RULES)
+    out.update(jaxpr_audit.CHECKS)
+    out.update(contracts.CHECKS)
+    return out
+
+
+def run_all(paths=None, repo_root: str = ".", with_contracts: bool = True,
+            with_audit: bool = True, with_lint: bool = True) -> Report:
+    """Run the selected passes and merge their reports."""
+    from repro.analysis import contracts, jaxpr_audit, lint
+    rep = Report()
+    if with_lint:
+        r = lint.lint_paths(paths or lint.DEFAULT_PATHS, repo_root)
+        rep.passes += r.passes
+        rep.scanned += r.scanned
+        rep.extend(r.findings)
+    if with_audit:
+        r = jaxpr_audit.audit_all()
+        rep.passes += r.passes
+        rep.scanned += r.scanned
+        rep.extend(r.findings)
+    if with_contracts:
+        r = contracts.check_all()
+        rep.passes += r.passes
+        rep.scanned += r.scanned
+        rep.extend(r.findings)
+    return rep

@@ -1,0 +1,68 @@
+"""CLI for the simulation sanitizer.
+
+    python -m repro.analysis                 # lint + jaxpr audit
+    python -m repro.analysis --ci            # all passes; nonzero on ANY
+                                             # finding (the CI gate)
+    python -m repro.analysis --contracts     # include compile contracts
+    python -m repro.analysis --json r.json --sarif r.sarif
+    python -m repro.analysis --paths src/repro/core benchmarks
+
+Exit status: 0 clean; 1 findings (error-level by default, any level under
+``--ci``); 2 usage errors.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import repro.analysis as analysis
+from repro.analysis import lint
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr audit + repo-idiom lint + compile contracts")
+    ap.add_argument("--paths", nargs="*", default=None,
+                    help=f"files/dirs to lint "
+                         f"(default: {' '.join(lint.DEFAULT_PATHS)})")
+    ap.add_argument("--repo-root", default=".",
+                    help="repo root for relative finding paths")
+    ap.add_argument("--ci", action="store_true",
+                    help="run every pass and fail on ANY finding")
+    ap.add_argument("--contracts", action="store_true",
+                    help="also run the compile-contract grids")
+    ap.add_argument("--no-audit", action="store_true",
+                    help="skip the jaxpr audit (pure AST run)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the JSON report artifact")
+    ap.add_argument("--sarif", metavar="PATH",
+                    help="write the SARIF 2.1.0 artifact")
+    args = ap.parse_args(argv)
+
+    rep = analysis.run_all(
+        paths=args.paths, repo_root=args.repo_root,
+        with_lint=True,
+        with_audit=not args.no_audit,
+        with_contracts=args.ci or args.contracts)
+    try:
+        import jax
+        rep.meta["jax"] = jax.__version__
+        rep.meta["backend"] = jax.default_backend()
+    except Exception:    # pragma: no cover - report stays usable without
+        pass
+
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(rep.to_json())
+    if args.sarif:
+        with open(args.sarif, "w") as f:
+            f.write(rep.to_sarif(analysis.rule_index()))
+    print(rep.render_text())
+    if args.ci:
+        return 1 if rep.findings else 0
+    return rep.exit_code()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

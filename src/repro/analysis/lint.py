@@ -1,0 +1,580 @@
+"""Repo-idiom AST lint: mechanical checks for this repo's contracts.
+
+Each rule encodes an invariant that previously lived only in reviewers'
+heads (DESIGN.md §12 has the catalog with rationale):
+
+* ``traced-param-branch`` — a traced ``MechParams``/``WorkloadParams`` leaf
+  used in a Python ``if``/``while``/``assert`` inside traced code.  Python
+  branches burn the traced value into the compiled artifact (best case:
+  ConcretizationError; worst case: a silent recompile per value).
+* ``unmasked-padded-reduction`` — a ``jnp`` reduction over one of the
+  padded FTS *value* fields (``benefit``/``last_use``/``row_sum``) that is
+  not routed through ``masked_argmin``/``jnp.where``.  Padding lanes hold
+  0, which wins an unmasked min and silently corrupts victim selection.
+* ``numpy-in-scan-body`` — ``numpy`` (host) calls or ``.item()`` inside a
+  traced function.  Both force a host sync per scan step, the exact
+  failure the fused hot loop exists to avoid.
+* ``jit-closure-cache`` — ``jax.jit`` called inside a function body.  A
+  fresh ``jit`` wrapper per call defeats jax's compile cache and is the
+  recompile-storm idiom ``timing.static_group_key`` buckets exist to
+  prevent.  Memoized factories (``functools.lru_cache``/``cache``) are
+  exempt; intentional sites take ``# repro: allow(jit-closure-cache)``.
+* ``pallas-vmem-budget`` — sum of statically-resolvable ``pl.BlockSpec``
+  block footprints (x2 for double buffering) against the TPU VMEM ceiling
+  (~16 MiB/core, see the Pallas guide).  Specs with unresolvable dims are
+  skipped rather than guessed.
+* ``pallas-io-alias`` — ``input_output_aliases`` sanity on ``pallas_call``:
+  literal int->int dict, keys within the operand count of the immediate
+  application, values within the output arity, no two inputs aliased to
+  one output.
+
+"Traced code" is detected syntactically: jit-decorated functions, functions
+passed to ``lax.scan``/``jax.jit`` (possibly through ``functools.partial``),
+functions defined inside a ``make_*``/``_make_*`` factory (the repo's
+scan-body-factory convention), and anything nested in one of those.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+from repro.analysis import findings as F
+
+# ---------------------------------------------------------------------------
+# rule registry
+
+RULES: Dict[str, str] = {}          # id -> short description
+_CHECKS: List[Tuple[str, Callable]] = []
+
+
+def rule(rid: str, desc: str):
+    def deco(fn):
+        RULES[rid] = desc
+        _CHECKS.append((rid, fn))
+        return fn
+    return deco
+
+
+# traced-pytree leaf names: the fields a Python branch must never touch.
+# Pulled from the live NamedTuples so the lint can't drift from the code.
+def _traced_fields() -> set:
+    try:
+        from repro.core.timing import MechParams
+        from repro.core.workload import WorkloadParams
+        return set(MechParams._fields) | set(WorkloadParams._fields)
+    except Exception:    # pragma: no cover - analysis must run standalone
+        return {"rcd", "rp", "cas", "bl", "ccd", "rcd_fast", "rp_fast",
+                "reloc", "lisa_hop", "seg_blocks", "insert_threshold",
+                "benefit_max", "n_slots", "segs_per_row"}
+
+
+TRACED_TYPES = {"MechParams", "WorkloadParams"}
+PADDED_VALUE_FIELDS = {"benefit", "last_use", "row_sum"}
+REDUCTIONS = {"argmin", "argmax", "min", "max", "amin", "amax",
+              "nanmin", "nanmax", "sum", "prod"}
+MASK_HELPERS = {"where", "masked_argmin", "select"}
+VMEM_CEILING_BYTES = 16 * 1024 * 1024    # per-core VMEM (v4/v5 class)
+
+
+# ---------------------------------------------------------------------------
+# per-module context
+
+@dataclasses.dataclass
+class Module:
+    path: str                       # repo-relative
+    src_lines: List[str]
+    tree: ast.Module
+    parents: Dict[ast.AST, ast.AST]
+    traced_fns: set                 # FunctionDef/Lambda nodes in traced context
+    np_aliases: set                 # local names bound to the numpy module
+    jnp_aliases: set                # local names bound to jax.numpy
+
+    def finding(self, rid: str, node: ast.AST, msg: str,
+                level: str = F.ERROR) -> Optional[F.Finding]:
+        line = getattr(node, "lineno", None)
+        if line is not None and rid in F.allowed_rules(self.src_lines, line):
+            return None
+        return F.Finding(rule=rid, message=msg, level=level,
+                         path=self.path, line=line)
+
+
+def _parent_map(tree: ast.AST) -> Dict[ast.AST, ast.AST]:
+    parents = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def _dotted(node: ast.AST) -> str:
+    """'a.b.c' for Name/Attribute chains, '' otherwise."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _collect_aliases(tree: ast.Module) -> Tuple[set, set]:
+    np_names, jnp_names = set(), set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                tgt = a.asname or a.name.split(".")[0]
+                if a.name == "numpy":
+                    np_names.add(tgt)
+                elif a.name in ("jax.numpy",):
+                    jnp_names.add(tgt)
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "jax" and any(a.name == "numpy"
+                                            for a in node.names):
+                for a in node.names:
+                    if a.name == "numpy":
+                        jnp_names.add(a.asname or "numpy")
+    return np_names, jnp_names
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """jax.jit / functools.partial(jax.jit, ...) as an expression."""
+    d = _dotted(node)
+    if d in ("jax.jit", "jit"):
+        return True
+    if isinstance(node, ast.Call) and _dotted(node.func) in (
+            "functools.partial", "partial"):
+        return bool(node.args) and _is_jit_expr(node.args[0])
+    return False
+
+
+def _local_funcdefs(tree: ast.AST) -> Dict[str, ast.AST]:
+    """name -> FunctionDef for defs at every scope (last wins)."""
+    out = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out[node.name] = node
+    return out
+
+
+def _traced_functions(tree: ast.Module) -> set:
+    """The syntactic 'traced context' set (see module docstring)."""
+    defs = _local_funcdefs(tree)
+    traced = set()
+
+    def _mark(fn_node):
+        if fn_node is not None and fn_node not in traced:
+            traced.add(fn_node)
+
+    def _resolve_callee(node) -> Optional[ast.AST]:
+        # Name -> def; functools.partial(Name, ...) -> def; Lambda -> itself
+        if isinstance(node, ast.Lambda):
+            return node
+        if isinstance(node, ast.Name):
+            return defs.get(node.id)
+        if isinstance(node, ast.Call) and _dotted(node.func) in (
+                "functools.partial", "partial") and node.args:
+            return _resolve_callee(node.args[0])
+        return None
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # jit-decorated
+            if any(_is_jit_expr(d) for d in node.decorator_list):
+                _mark(node)
+            # defined inside a scan-body factory (repo convention)
+            if node.name.startswith(("make_", "_make_")):
+                for sub in ast.walk(node):
+                    if sub is not node and isinstance(
+                            sub, (ast.FunctionDef, ast.Lambda)):
+                        _mark(sub)
+        elif isinstance(node, ast.Call):
+            d = _dotted(node.func)
+            if d.endswith("lax.scan") or d == "scan":
+                if node.args:
+                    _mark(_resolve_callee(node.args[0]))
+            elif d in ("jax.jit", "jit"):
+                if node.args:
+                    _mark(_resolve_callee(node.args[0]))
+    # close over nesting: anything defined inside a traced fn is traced
+    changed = True
+    while changed:
+        changed = False
+        for fn in list(traced):
+            for sub in ast.walk(fn):
+                if sub is not fn and isinstance(
+                        sub, (ast.FunctionDef, ast.Lambda)) \
+                        and sub not in traced:
+                    traced.add(sub)
+                    changed = True
+    return traced
+
+
+def load_module(path: str, repo_root: str = ".") -> Optional[Module]:
+    try:
+        with open(path, "r") as f:
+            src = f.read()
+        tree = ast.parse(src, filename=path)
+    except (OSError, SyntaxError):
+        return None
+    rel = os.path.relpath(path, repo_root)
+    np_a, jnp_a = _collect_aliases(tree)
+    return Module(path=rel, src_lines=src.splitlines(), tree=tree,
+                  parents=_parent_map(tree),
+                  traced_fns=_traced_functions(tree),
+                  np_aliases=np_a, jnp_aliases=jnp_a or {"jnp"})
+
+
+# ---------------------------------------------------------------------------
+# rules
+
+@rule("traced-param-branch",
+      "traced MechParams/WorkloadParams leaf in a Python branch")
+def _check_traced_branch(mod: Module) -> Iterable[F.Finding]:
+    fields = _traced_fields()
+    for fn in mod.traced_fns:
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        # names annotated as traced-param pytrees in this signature
+        traced_names = set()
+        for a in list(fn.args.args) + list(fn.args.kwonlyargs) \
+                + list(fn.args.posonlyargs):
+            ann = a.annotation
+            if ann is not None and _dotted(ann).split(".")[-1] in TRACED_TYPES:
+                traced_names.add(a.arg)
+        if not traced_names:
+            continue
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)):
+                test = node.test
+            elif isinstance(node, ast.Assert):
+                test = node.test
+            elif isinstance(node, ast.IfExp):
+                test = node.test
+            else:
+                continue
+            for f in _traced_attrs_in(test, traced_names, fields, mod):
+                yield f
+
+
+def _traced_attrs_in(test: ast.AST, traced_names: set, fields: set,
+                     mod: Module) -> Iterable[F.Finding]:
+    # skip `x.attr is None` / `is not None` shape-vs-None dispatch
+    skip = set()
+    for node in ast.walk(test):
+        if isinstance(node, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            for sub in ast.walk(node):
+                skip.add(sub)
+    for node in ast.walk(test):
+        if node in skip or not isinstance(node, ast.Attribute):
+            continue
+        if isinstance(node.value, ast.Name) \
+                and node.value.id in traced_names and node.attr in fields:
+            f = mod.finding(
+                "traced-param-branch", node,
+                f"traced leaf `{node.value.id}.{node.attr}` used in a Python "
+                f"branch/assert inside traced code; use jnp.where / "
+                f"lax.select (or move the knob to StaticConfig)")
+            if f:
+                yield f
+
+
+@rule("unmasked-padded-reduction",
+      "jnp reduction over a padded FTS value field without mask routing")
+def _check_padded_reduction(mod: Module) -> Iterable[F.Finding]:
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in REDUCTIONS):
+            continue
+        base = node.func.value
+        if not (isinstance(base, ast.Name) and base.id in mod.jnp_aliases):
+            continue
+        for arg in node.args:
+            for attr in ast.walk(arg):
+                if not (isinstance(attr, ast.Attribute)
+                        and attr.attr in PADDED_VALUE_FIELDS):
+                    continue
+                # routed through a mask helper somewhere between the
+                # reduction call and the padded field?  walk up parents.
+                cur, masked = attr, False
+                while cur is not node and cur in mod.parents:
+                    cur = mod.parents[cur]
+                    if isinstance(cur, ast.Call):
+                        callee = cur.func
+                        nm = callee.attr if isinstance(
+                            callee, ast.Attribute) else _dotted(callee)
+                        if nm in MASK_HELPERS:
+                            masked = True
+                            break
+                if masked:
+                    continue
+                f = mod.finding(
+                    "unmasked-padded-reduction", node,
+                    f"jnp.{node.func.attr} over padded field "
+                    f"`.{attr.attr}` without masked_argmin/jnp.where; "
+                    f"padding lanes hold 0 and win unmasked reductions")
+                if f:
+                    yield f
+
+
+@rule("numpy-in-scan-body",
+      "host numpy call or .item() inside a traced function")
+def _check_numpy_in_scan(mod: Module) -> Iterable[F.Finding]:
+    if not mod.np_aliases:
+        np_ok = False
+    else:
+        np_ok = True
+    for fn in mod.traced_fns:
+        for node in ast.walk(fn):
+            if np_ok and isinstance(node, ast.Attribute) \
+                    and isinstance(node.value, ast.Name) \
+                    and node.value.id in mod.np_aliases:
+                f = mod.finding(
+                    "numpy-in-scan-body", node,
+                    f"host `{node.value.id}.{node.attr}` inside a traced "
+                    f"function; use jnp (host numpy forces a sync per step)")
+                if f:
+                    yield f
+            elif isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" and not node.args:
+                f = mod.finding(
+                    "numpy-in-scan-body", node,
+                    "`.item()` inside a traced function forces a host sync "
+                    "per scan step")
+                if f:
+                    yield f
+
+
+@rule("jit-closure-cache",
+      "jax.jit created inside a function body (defeats the compile cache)")
+def _check_jit_closure(mod: Module) -> Iterable[F.Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        # memoized factory idiom: functools.lru_cache / functools.cache
+        if any(_dotted(d).split(".")[-1] in ("lru_cache", "cache")
+               or (isinstance(d, ast.Call)
+                   and _dotted(d.func).split(".")[-1] in
+                   ("lru_cache", "cache"))
+               for d in node.decorator_list):
+            continue
+        for stmt in node.body:
+            for sub in ast.walk(stmt):
+                if isinstance(sub, ast.Call) and _dotted(sub.func) in (
+                        "jax.jit", "jit"):
+                    # a jit nested in an inner memoized def is handled when
+                    # the walk reaches that def; skip non-immediate bodies
+                    owner = mod.parents.get(sub)
+                    while owner is not None and not isinstance(
+                            owner, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                        owner = mod.parents.get(owner)
+                    if owner is not node:
+                        continue
+                    f = mod.finding(
+                        "jit-closure-cache", sub,
+                        "jax.jit inside a function body creates a fresh "
+                        "compile cache per call; hoist to module scope, use "
+                        "a functools.lru_cache'd factory, or annotate an "
+                        "intentional baseline with "
+                        "`# repro: allow(jit-closure-cache)`")
+                    if f:
+                        yield f
+
+
+# ---- Pallas rules ---------------------------------------------------------
+
+def _const_env(mod: Module, fn: Optional[ast.AST]) -> Dict[str, int]:
+    """name -> int for simple single literal assignments (module scope plus
+    the enclosing function's scope and int parameter defaults)."""
+    env: Dict[str, int] = {}
+
+    def scan_block(stmts):
+        for st in stmts:
+            if isinstance(st, ast.Assign) and len(st.targets) == 1 \
+                    and isinstance(st.targets[0], ast.Name) \
+                    and isinstance(st.value, ast.Constant) \
+                    and isinstance(st.value.value, int):
+                env[st.targets[0].id] = st.value.value
+
+    scan_block(mod.tree.body)
+    if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        args = fn.args
+        pos = list(args.posonlyargs) + list(args.args)
+        for a, d in zip(pos[len(pos) - len(args.defaults):], args.defaults):
+            if isinstance(d, ast.Constant) and isinstance(d.value, int):
+                env[a.arg] = d.value
+        for a, d in zip(args.kwonlyargs, args.kw_defaults):
+            if d is not None and isinstance(d, ast.Constant) \
+                    and isinstance(d.value, int):
+                env[a.arg] = d.value
+        scan_block(fn.body)
+    return env
+
+
+def _eval_dim(node: ast.AST, env: Dict[str, int]) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    if isinstance(node, ast.Name):
+        return env.get(node.id)
+    if isinstance(node, ast.BinOp) and isinstance(
+            node.op, (ast.Mult, ast.Add, ast.FloorDiv)):
+        lo, hi = _eval_dim(node.left, env), _eval_dim(node.right, env)
+        if lo is None or hi is None:
+            return None
+        if isinstance(node.op, ast.Mult):
+            return lo * hi
+        if isinstance(node.op, ast.Add):
+            return lo + hi
+        return lo // hi if hi else None
+    return None
+
+
+def _enclosing_fn(mod: Module, node: ast.AST) -> Optional[ast.AST]:
+    cur = mod.parents.get(node)
+    while cur is not None and not isinstance(
+            cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        cur = mod.parents.get(cur)
+    return cur
+
+
+@rule("pallas-vmem-budget",
+      "statically-resolvable Pallas block footprints exceed the VMEM ceiling")
+def _check_vmem(mod: Module) -> Iterable[F.Finding]:
+    # group BlockSpec literals by enclosing function (one kernel wrapper
+    # builds one pallas_call in this repo); skip functions with any
+    # unresolvable spec rather than guessing.
+    per_fn: Dict[ast.AST, List[Optional[int]]] = {}
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call)
+                and _dotted(node.func).split(".")[-1] == "BlockSpec"):
+            continue
+        shape_node = node.args[0] if node.args else None
+        for kw in node.keywords:
+            if kw.arg in ("block_shape",):
+                shape_node = kw.value
+        fn = _enclosing_fn(mod, node)
+        if fn is None:
+            continue
+        env = _const_env(mod, fn)
+        elems: Optional[int]
+        if isinstance(shape_node, ast.Tuple):
+            elems = 1
+            for d in shape_node.elts:
+                dv = _eval_dim(d, env)
+                if dv is None:
+                    elems = None
+                    break
+                elems *= dv
+        else:
+            elems = None
+        per_fn.setdefault(fn, []).append(elems)
+    for fn, sizes in per_fn.items():
+        if any(s is None for s in sizes):
+            continue          # indeterminate dims: no guess, no finding
+        # 4 bytes/elem (int32/f32 repo-wide), x2 for double buffering
+        total = sum(sizes) * 4 * 2
+        if total > VMEM_CEILING_BYTES:
+            f = mod.finding(
+                "pallas-vmem-budget", fn,
+                f"block specs in `{getattr(fn, 'name', '<fn>')}` total "
+                f"~{total / (1 << 20):.1f} MiB (x2 double-buffered) against "
+                f"a {VMEM_CEILING_BYTES // (1 << 20)} MiB VMEM ceiling; "
+                f"shrink block shapes or tile the grid")
+            if f:
+                yield f
+
+
+@rule("pallas-io-alias",
+      "input_output_aliases inconsistent with the pallas_call signature")
+def _check_io_alias(mod: Module) -> Iterable[F.Finding]:
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call)
+                and _dotted(node.func).split(".")[-1] == "pallas_call"):
+            continue
+        alias_kw = next((k for k in node.keywords
+                         if k.arg == "input_output_aliases"), None)
+        if alias_kw is None:
+            continue
+        if not isinstance(alias_kw.value, ast.Dict) or not all(
+                isinstance(k, ast.Constant) and isinstance(k.value, int)
+                and isinstance(v, ast.Constant) and isinstance(v.value, int)
+                for k, v in zip(alias_kw.value.keys, alias_kw.value.values)):
+            f = mod.finding(
+                "pallas-io-alias", node,
+                "input_output_aliases must be a literal {int: int} dict so "
+                "the alias contract is reviewable statically")
+            if f:
+                yield f
+            continue
+        pairs = [(k.value, v.value) for k, v in
+                 zip(alias_kw.value.keys, alias_kw.value.values)]
+        # output arity from out_shape: single ShapeDtypeStruct -> 1
+        n_out = 1
+        out_kw = next((k for k in node.keywords if k.arg == "out_shape"),
+                      None)
+        if out_kw is not None and isinstance(out_kw.value,
+                                             (ast.Tuple, ast.List)):
+            n_out = len(out_kw.value.elts)
+        # operand count when the call is immediately applied:
+        # pl.pallas_call(...)(a, b, c)
+        n_in = None
+        outer = mod.parents.get(node)
+        if isinstance(outer, ast.Call) and outer.func is node \
+                and not any(isinstance(a, ast.Starred) for a in outer.args):
+            n_in = len(outer.args)
+        seen_out = set()
+        for kin, vout in pairs:
+            msg = None
+            if n_in is not None and not (0 <= kin < n_in):
+                msg = (f"alias input index {kin} out of range for "
+                       f"{n_in} operands")
+            elif not (0 <= vout < n_out):
+                msg = (f"alias output index {vout} out of range for "
+                       f"{n_out} outputs")
+            elif vout in seen_out:
+                msg = (f"two inputs aliased to output {vout}; an output "
+                       f"buffer can only be donated once")
+            seen_out.add(vout)
+            if msg:
+                f = mod.finding("pallas-io-alias", node, msg)
+                if f:
+                    yield f
+
+
+# ---------------------------------------------------------------------------
+# driver
+
+DEFAULT_PATHS = ("src/repro/core", "src/repro/kernels", "src/repro/analysis",
+                 "benchmarks")
+
+
+def iter_py_files(paths: Iterable[str], repo_root: str = ".") -> List[str]:
+    out = []
+    for p in paths:
+        full = p if os.path.isabs(p) else os.path.join(repo_root, p)
+        if os.path.isfile(full) and full.endswith(".py"):
+            out.append(full)
+        elif os.path.isdir(full):
+            for dirpath, _dirnames, filenames in os.walk(full):
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        out.append(os.path.join(dirpath, fn))
+    return sorted(out)
+
+
+def lint_paths(paths: Iterable[str] = DEFAULT_PATHS,
+               repo_root: str = ".") -> F.Report:
+    rep = F.Report(passes=["lint"])
+    for path in iter_py_files(paths, repo_root):
+        mod = load_module(path, repo_root)
+        if mod is None:
+            continue
+        rep.scanned.append(mod.path)
+        for _rid, check in _CHECKS:
+            rep.extend(check(mod))
+    return rep

@@ -85,6 +85,15 @@ N_MSHR = 8  # outstanding misses per core (paper Table 1) — closed-loop thrott
 # these, the trace-axis analogue of the FTS padding slots.
 NOOP_ISSUE = int(fts_lib.BIG)
 
+# Saturation ceiling for the per-core latency-sum counter.  A request's
+# latency includes its queueing delay, so the only sound per-step bound is
+# simulated time itself (< 2**30 ticks); an unclamped int32 sum can
+# therefore wrap within the declared 1M-request scan capacity
+# (``analysis.jaxpr_audit.TRACE_LEN_BOUND``).  Clamping at 2**30 - 1 keeps
+# the pre-clamp add wrap-free (cap + per-step bound == INT32_MAX) and is
+# bitwise-invisible below the cap (tests/test_analysis.py pins this).
+LAT_SUM_CAP = (1 << 30) - 1
+
 
 def noop_pad(trace: Trace, length: int) -> Trace:
     """Right-pad a (T,)/(C, T) trace to ``length`` requests with no-ops.
@@ -501,8 +510,9 @@ def make_step(static: StaticConfig, geom: DRAMGeometry = GEOM,
             row_hits=cnt.row_hits + (dec.row_hit & real).astype(jnp.int32),
             cache_hits=cnt.cache_hits + dec.hit.astype(jnp.int32),
             insertions=cnt.insertions + dec.n_ins,
-            lat_sum_ns=cnt.lat_sum_ns.at[core].add(
-                jnp.where(real, lat_ns, 0)),
+            lat_sum_ns=jnp.minimum(
+                cnt.lat_sum_ns.at[core].add(jnp.where(real, lat_ns, 0)),
+                LAT_SUM_CAP),
             req_cnt=cnt.req_cnt.at[core].add(real.astype(jnp.int32)),
             # the request is not retired until its burst clears the shared
             # data bus, which can outlast the bank's own serv_end+reloc —
@@ -653,7 +663,8 @@ def _make_step_dense(static: StaticConfig, geom: DRAMGeometry = GEOM):
             row_hits=cnt.row_hits + row_hit.astype(jnp.int32),
             cache_hits=cnt.cache_hits + hit.astype(jnp.int32),
             insertions=cnt.insertions + n_ins,
-            lat_sum_ns=cnt.lat_sum_ns.at[req.core].add(lat_ns),
+            lat_sum_ns=jnp.minimum(
+                cnt.lat_sum_ns.at[req.core].add(lat_ns), LAT_SUM_CAP),
             req_cnt=cnt.req_cnt.at[req.core].add(1),
             # the request is not retired until its burst clears the shared
             # data bus, which can outlast the bank's own serv_end+reloc —

@@ -339,8 +339,11 @@ def make_wave_step(static: StaticConfig, geom: DRAMGeometry = GEOM):
             row_hits=cnt.row_hits + isum(dec.row_hit & real),
             cache_hits=cnt.cache_hits + isum(dec.hit),
             insertions=cnt.insertions + jnp.sum(dec.n_ins),
-            lat_sum_ns=cnt.lat_sum_ns.at[wave.core].add(
-                jnp.where(real, lat_ns, 0)),
+            # saturates at the same cap as the serial scan (dram.LAT_SUM_CAP)
+            # so the bitwise-equality contract holds through saturation
+            lat_sum_ns=jnp.minimum(
+                cnt.lat_sum_ns.at[wave.core].add(jnp.where(real, lat_ns, 0)),
+                dram.LAT_SUM_CAP),
             req_cnt=cnt.req_cnt.at[wave.core].add(reali),
             t_end=t_end,
         )
