@@ -42,6 +42,16 @@ The TRACEGEN section (DESIGN.md §11) measures the device workload engine
 8-core acceptance workload — asserted >= 10x reqs/sec (2x ``--quick``
 tripwire) — into ``BENCH_tracegen.json`` (also published by CI).
 
+The STREAMING section (DESIGN.md §13) measures the chunked segment-carried
+replay against the monolithic sweep on the fig-12 capacity grid — asserted
+>= 0.9x steps/sec at chunk >= 64k (looser ``--quick`` tripwire at toy
+chunk sizes, where per-segment dispatch overhead dominates) — plus, in
+full mode, the capability the monolithic path cannot offer at all: a
+>4M-request epoch-synthesized stream (beyond the audit's declared
+``TRACE_LEN_BOUND`` = 1M monolithic budget) replayed to completion with
+O(chunk) device trace residency.  Codec compression on the measured trace
+rides along.  Written to ``BENCH_streaming.json`` (also published by CI).
+
 Compilations are counted via ``dram.JIT_TRACE_LOG`` (the scan body logs one
 entry per trace).
 """
@@ -56,7 +66,7 @@ import numpy as np
 
 from benchmarks import common
 from repro.analysis import contracts
-from repro.core import dram, traces, workload
+from repro.core import dram, streaming, traces, workload
 from repro.core.timing import paper_config, shared_static
 
 # Grids and jit budgets live in repro.analysis.contracts (the compile-
@@ -71,6 +81,7 @@ HOTLOOP_GRID = [dict(cache_rows=cr) for cr in (4, 8, 16, 32, 64)]
 BENCH_JSON = "BENCH_hotloop.json"
 BENCH_WAVE_JSON = "BENCH_wavefront.json"
 BENCH_TRACEGEN_JSON = "BENCH_tracegen.json"
+BENCH_STREAM_JSON = "BENCH_streaming.json"
 # the wavefront scheduler's bank-level-parallelism window (DESIGN.md §10)
 WAVE_LOOKAHEAD = 32
 
@@ -276,6 +287,103 @@ def _tracegen_report():
     }
 
 
+def _long_stream_demo():
+    """Full mode only: replay a >4M-request epoch-synthesized stream —
+    larger than the monolithic scan's declared ``TRACE_LEN_BOUND``
+    capacity — to completion through the chunked path (DESIGN.md §13)."""
+    from repro.analysis.jaxpr_audit import TRACE_LEN_BOUND
+    per_channel, epochs = 65_536, 16
+    total = 4 * per_channel * epochs          # 4.19M request slots
+    assert total > TRACE_LEN_BOUND
+    # small interarrival keeps the 4M-request clock far below the int32
+    # tick budget even after 16 carried epoch offsets
+    spec = workload.preset("stream", n_cores=8, n_channels=4,
+                           per_channel=per_channel, seed=11,
+                           interarrival_ns=4.0)
+    cfg = paper_config("figcache_fast")
+    t0 = time.time()
+    cnt = jax.block_until_ready(streaming.simulate_stream(
+        workload.generate_stream(spec, epochs), cfg))
+    dt = time.time() - t0
+    served = int(np.asarray(cnt.reads).sum() + np.asarray(cnt.writes).sum())
+    return {
+        "long_stream_reqs": total,
+        "long_stream_served": served,
+        "long_stream_reqs_per_sec": round(total / dt),
+        "long_stream_exceeds_monolithic_bound": total > TRACE_LEN_BOUND,
+    }
+
+
+def _streaming_report(tr_small):
+    """Chunked streamed replay vs the monolithic sweep on the fig-12
+    capacity grid (DESIGN.md §13), written to ``BENCH_streaming.json``.
+
+    Full mode replays a 4x128k-channel workload at chunk 64k and asserts
+    >= 0.9x monolithic steps/sec — the price of chunking must stay inside
+    JAX's async-dispatch overlap.  ``--quick`` CI replays the small shared
+    trace at chunk 1k, where per-segment dispatch overhead is the whole
+    story, and enforces a 0.4x tripwire so a real regression (e.g. a
+    device sync per segment) still fails loudly."""
+    cfgs = [paper_config("figcache_fast", **kw) for kw in CAPACITY_GRID]
+    static = shared_static(cfgs)
+    batch = _stack_params(cfgs)
+    if common.IS_QUICK:
+        tr, chunk, floor = tr_small, 1024, 0.4
+    else:
+        _name, _frac, apps = traces.eight_core_workloads()[15]
+        tr = traces.build_trace(apps, 4, 131_072, 2)
+        chunk, floor = 65_536, 0.9
+    T = int(np.asarray(tr.t_issue).shape[-1])
+    n_steps = len(cfgs) * int(np.asarray(tr.t_issue).size)
+    reps = 1 if common.IS_QUICK else 3
+
+    def mono():
+        return dram.run_sweep(tr, static, batch)
+
+    def chunked():
+        return streaming.sweep_stream(
+            streaming.iter_chunks(tr, chunk), static, batch)
+
+    j0 = dram.jit_trace_count()
+    ref = jax.block_until_ready(mono())           # warm both paths
+    got = jax.block_until_ready(chunked())
+    jits = dram.jit_trace_count() - j0
+    _assert_counters_equal(ref, got, "streaming")
+    rate = {}
+    for label, fn in (("monolithic", mono), ("chunked", chunked)):
+        t0 = time.time()
+        for _ in range(reps):
+            jax.block_until_ready(fn())
+        rate[label] = n_steps * reps / (time.time() - t0)
+    rel = rate["chunked"] / rate["monolithic"]
+    assert rel >= floor, \
+        f"chunked replay {rel:.2f}x of monolithic at chunk={chunk}, " \
+        f"below the {floor}x floor"
+
+    # codec compression on the measured trace's channel 0 (realistic page
+    # reuse; adversarial no-reuse traces can inflate instead — the chunk
+    # cluster table is a bet on locality, documented in DESIGN.md §13)
+    ch0 = jax.tree.map(lambda a: np.asarray(a)[0], tr)
+    enc = traces.encode_trace(ch0, chunk_len=min(traces.CHUNK_LEN, T))
+    raw = sum(np.asarray(x).nbytes for x in ch0)
+    report = {
+        "streaming_chunk_len": chunk,
+        "streaming_reqs": int(np.asarray(tr.t_issue).size),
+        "steps_per_sec_monolithic": round(rate["monolithic"]),
+        "steps_per_sec_chunked": round(rate["chunked"]),
+        "streaming_relative": round(rel, 3),
+        "streaming_floor": floor,
+        "jits_streaming_warm": jits,
+        "codec_raw_bytes": raw,
+        "codec_encoded_bytes": traces.encoded_nbytes(enc),
+        "codec_ratio": round(raw / traces.encoded_nbytes(enc), 2),
+        "streaming_quick": common.IS_QUICK,
+    }
+    if not common.IS_QUICK:
+        report.update(_long_stream_demo())
+    return report
+
+
 def run():
     cfgs = [paper_config("figcache_fast", **kw) for kw in GRID]
     static = shared_static(cfgs)
@@ -336,6 +444,12 @@ def run():
         json.dump(tracegen, f, indent=2, sort_keys=True)
         f.write("\n")
 
+    # ---- chunked streaming vs monolithic replay (§13) ---------------------
+    stream = _streaming_report(tr)
+    with open(BENCH_STREAM_JSON, "w") as f:
+        json.dump(stream, f, indent=2, sort_keys=True)
+        f.write("\n")
+
     n = len(cfgs)
     summary = {
         "n_configs": n,
@@ -349,6 +463,7 @@ def run():
         **hot,
         "wavefront_speedup": wavefront["wavefront_speedup"],
         "tracegen_speedup": tracegen["tracegen_speedup"],
+        "streaming_relative": stream["streaming_relative"],
     }
     with open(BENCH_JSON, "w") as f:
         json.dump(summary, f, indent=2, sort_keys=True)

@@ -164,6 +164,22 @@ def _c_sweep_traces() -> int:
     return dram.jit_trace_count() - j0
 
 
+@contract("streaming.chunked-replay",
+          "a chunked streamed replay reuses ONE compiled segment step for "
+          "every chunk: SimState out is structurally SimState in, so all "
+          "same-shape segments hit the same cache entry (DESIGN.md §13)", 1,
+          ("StaticConfig", "variant", "segment shape"))
+def _c_chunked_replay() -> int:
+    from repro.core import dram, streaming
+    from repro.core.timing import paper_config
+    cfg = paper_config("figcache_fast")
+    tr = _toy_trace()                      # (256,) -> 4 chunks of 64
+    j0 = dram.jit_trace_count()
+    jax.block_until_ready(streaming.simulate_stream(
+        streaming.iter_chunks(tr, 64), cfg))
+    return dram.jit_trace_count() - j0
+
+
 @contract("workload.generate_many",
           "a workload grid sharing one generator structure synthesizes as "
           "ONE vmapped compiled call", 1,

@@ -539,6 +539,43 @@ def _trace_run_sweep(variant: str, channels: int = 0):
         lambda t, p: jax.vmap(lambda one: fn(t, static, one))(p))(tr, pb)
 
 
+def _abstract_sim_state(static, channels: int = 0, batch: int = 0):
+    from repro.core import dram
+    st = dram.sim_init(static, channels=channels or None,
+                       batch=batch or None)
+    return jax.tree.map(lambda a: _sds(a.shape, a.dtype), st)
+
+
+def _trace_run_segment(variant: str, channels: int = 0, batch: int = 0):
+    """Abstract-trace the chunked segment step (``dram.run_segment`` /
+    ``run_sweep_segment``, DESIGN.md §13).
+
+    Unlike ``run_sweep``, the ``SimState`` carry enters as an *input*: the
+    scan resumes from whatever the previous segment left.  The declared
+    ``SIM_CARRY_BOUNDS`` still apply because every bound is a per-segment
+    *invariant* — an ``abs_max`` that holds on segment exit holds on the
+    next segment's entry, and the ``lat_sum_ns`` saturation story composes
+    across segments: the carried-in value is <= ``dram.LAT_SUM_CAP`` (the
+    clamp is part of the step), so the pre-clamp add is bounded by
+    ``LAT_SUM_CAP + T_MAX == INT32_MAX`` on EVERY segment, not just the
+    first.  The carry audit checks exactly that (clamp floor + one
+    declared step of pre-clamp headroom)."""
+    from repro.core import dram
+    from repro.core.timing import paper_config
+    static = paper_config("figcache_fast").static
+    tr = _abstract_trace(256, channels)
+    st = _abstract_sim_state(static, channels, batch)
+    if batch:
+        pb = _abstract_params(batch=batch)
+        return jax.make_jaxpr(
+            lambda t, p, s: dram.sweep_resume(t, static, p, s,
+                                              variant=variant))(tr, pb, st)
+    p = _abstract_params()
+    return jax.make_jaxpr(
+        lambda t, pp, s: dram.resume(t, static, pp, s,
+                                     variant=variant))(tr, p, st)
+
+
 def _workload_entry():
     """Trace the program ``workload.generate``/``generate_many`` compile:
     the un-jitted generator of one representative static structure."""
@@ -590,6 +627,12 @@ def default_entries() -> List[Entry]:
               carry_names=names, carry_bounds=SIM_CARRY_BOUNDS),
         Entry("simulator.sweep_traces[multi-channel]",
               lambda: _trace_run_sweep("fused", channels=2),
+              carry_names=names, carry_bounds=SIM_CARRY_BOUNDS),
+        Entry("dram.run_segment[fused]",
+              lambda: _trace_run_segment("fused"),
+              carry_names=names, carry_bounds=SIM_CARRY_BOUNDS),
+        Entry("dram.run_sweep_segment[multi-channel]",
+              lambda: _trace_run_segment("fused", channels=2, batch=4),
               carry_names=names, carry_bounds=SIM_CARRY_BOUNDS),
         Entry("workload.generate_many", _workload_entry),
         Entry("kernels.fts_lookup_op",

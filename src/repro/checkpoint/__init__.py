@@ -1,2 +1,3 @@
 from repro.checkpoint.checkpoint import (save_checkpoint, restore_checkpoint,
-                                         latest_step, AsyncCheckpointer)  # noqa
+                                         latest_step, AsyncCheckpointer,
+                                         save_sim_state, restore_sim_state)  # noqa

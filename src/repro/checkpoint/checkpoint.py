@@ -120,3 +120,32 @@ class AsyncCheckpointer:
                 self.last_error = e
         self._thread = threading.Thread(target=run, daemon=True)
         self._thread.start()
+
+
+def save_sim_state(path: str, chunk: int, state: Any,
+                   extra: Optional[dict] = None):
+    """Checkpoint a mid-trace simulator carry (``dram.SimState``) after
+    ``chunk`` completed stream segments (DESIGN.md §13).  The generic
+    pytree writer does the work; this wrapper just fixes the step
+    semantics (step == segments completed) and tags the manifest so a
+    resumed run can assert it is loading the right kind of state."""
+    meta = {"kind": "simstate", "chunk": int(chunk)}
+    if extra:
+        meta.update(extra)
+    save_checkpoint(path, int(chunk), state, meta)
+
+
+def restore_sim_state(path: str, like: Any,
+                      step: Optional[int] = None) -> tuple[Any, int]:
+    """Restore the newest (or ``step``'s) committed ``SimState``.
+
+    ``like`` supplies the pytree structure — a fresh ``dram.sim_init``
+    with the run's static/channel layout.  Returns ``(state, chunk)``;
+    pass ``chunk`` as the streaming driver's ``start_chunk`` to skip the
+    already-simulated segments."""
+    if step is None:
+        step = latest_step(path)
+        assert step is not None, f"no committed checkpoint under {path}"
+    state, meta = restore_checkpoint(path, step, like)
+    assert meta.get("kind", "simstate") == "simstate", meta
+    return state, int(meta.get("chunk", step))

@@ -677,28 +677,138 @@ def _make_step_dense(static: StaticConfig, geom: DRAMGeometry = GEOM):
     return step
 
 
+class SimState(NamedTuple):
+    """The FULL carried state of one simulator scan (DESIGN.md §13).
+
+    Everything a ``lax.scan`` segment threads from one request to the
+    next: the banked timing/FTS state and the counters.  Because the
+    monolithic scan is a left fold of ``make_step`` over this very carry,
+    running a trace as sequential *segments* — ``sim_init`` once, then
+    ``run_segment`` per chunk, then ``finalize`` — is bitwise identical
+    to the monolithic scan for ANY chunking, provided chunk padding uses
+    the no-op sentinel (``NOOP_ISSUE``), which every step variant treats
+    as state- and counter-inert (``tests/test_streaming.py`` pins both
+    properties).  The pytree is checkpointable as-is
+    (``checkpoint.save_sim_state``) so multi-million-request streamed
+    replays survive preemption mid-trace.
+
+    Leaves gain leading axes in the batched entry points: ``(C, ...)``
+    per channel (``sim_init(..., channels=C)``), ``(P, [C,] ...)`` per
+    params point (``sim_init(..., batch=P)`` / ``run_sweep_segment``).
+    """
+    bank: BankState
+    cnt: Counters
+
+
+def sim_init(static: StaticConfig, geom: DRAMGeometry = GEOM,
+             channels: int | None = None,
+             batch: int | None = None) -> SimState:
+    """Fresh scan carry for ``run_segment``/``run_sweep_segment``.
+
+    ``channels`` broadcasts a leading per-channel axis (for (C, T) trace
+    segments), ``batch`` a leading params axis; both compose as
+    ``(batch, channels, ...)`` — the axis order the segment entry points
+    vmap over."""
+    st = SimState(bank=init_state(static, geom), cnt=init_counters(geom))
+    dims = tuple(d for d in (batch, channels) if d is not None)
+    if dims:
+        st = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, dims + a.shape).copy(), st)
+    return st
+
+
+def finalize(state: SimState) -> Counters:
+    """End a chunked replay: extract the final ``Counters``."""
+    return state.cnt
+
+
+def _scan_segment(step, params: MechParams, trace: Trace,
+                  state: SimState) -> SimState:
+    carry, _ = jax.lax.scan(functools.partial(step, params),
+                            (state.bank, state.cnt), trace)
+    return SimState(*carry)
+
+
 def _scan_one(step, params: MechParams, trace: Trace,
               static: StaticConfig) -> Counters:
-    carry0 = (init_state(static), init_counters())
-    (_, cnt), _ = jax.lax.scan(functools.partial(step, params), carry0, trace)
-    return cnt
+    carry0 = SimState(init_state(static), init_counters())
+    return _scan_segment(step, params, trace, carry0).cnt
+
+
+def _resume(trace: Trace, static: StaticConfig, params: MechParams,
+            state: SimState, variant: str) -> SimState:
+    """Shared segment core: advance ``state`` over one (T,)/(C, T) chunk."""
+    step = make_step(static, variant=variant)
+    if trace.t_issue.ndim == 1:
+        return _scan_segment(step, params, trace, state)
+    return jax.vmap(lambda tr, st: _scan_segment(step, params, tr, st))(
+        trace, state)
+
+
+def resume(trace: Trace, static: StaticConfig, params: MechParams,
+           state: SimState, variant: str = "fused") -> SimState:
+    """Un-jitted segment reference: one chunk of a chunked replay.
+
+    ``state`` leaves must carry a leading (C,) axis iff the chunk's trace
+    leaves are (C, T).  The jitted form is ``run_segment``: every chunk
+    of the same shape reuses ONE compiled step (the fixed-shape chunks of
+    the ``traces`` codec are built for exactly this)."""
+    if is_tracer(trace.t_issue):
+        _note_trace(f"segment/{static.mechanism}/{variant}")
+    return _resume(trace, static, params, state, variant)
+
+
+run_segment = jax.jit(resume, static_argnums=(1,),
+                      static_argnames=("variant",))
 
 
 def simulate(trace: Trace, static: StaticConfig, params: MechParams,
              variant: str = "fused") -> Counters:
-    """Un-jitted reference: one params point, (T,) or (C, T) trace leaves."""
+    """Un-jitted reference: one params point, (T,) or (C, T) trace leaves.
+
+    Literally ``finalize(resume(trace, ..., sim_init(...)))`` — the
+    monolithic scan IS the one-chunk case of the segment API, which is
+    what makes chunk-size invariance structural rather than asserted."""
     if is_tracer(trace.t_issue):
         # log only when called under a jit trace (== one compilation);
         # eager reference runs must not inflate the jit count
         _note_trace(f"simulate/{static.mechanism}/{variant}")
-    step = make_step(static, variant=variant)
-    if trace.t_issue.ndim == 1:
-        return _scan_one(step, params, trace, static)
-    return jax.vmap(lambda tr: _scan_one(step, params, tr, static))(trace)
+    C = trace.t_issue.shape[0] if trace.t_issue.ndim == 2 else None
+    state = sim_init(static, channels=C)
+    return finalize(_resume(trace, static, params, state, variant))
 
 
 _simulate_jit = jax.jit(simulate, static_argnums=(1,),
                         static_argnames=("variant",))
+
+
+def _sweep_resume(trace: Trace, static: StaticConfig,
+                  params_batch: MechParams, state: SimState,
+                  variant: str) -> SimState:
+    """Shared batched-segment core: params leaves (P,), state leaves
+    (P, ...) or (P, C, ...)."""
+    step = make_step(static, variant=variant)
+    if trace.t_issue.ndim == 1:
+        one = lambda p, st: _scan_segment(step, p, trace, st)
+    else:
+        one = lambda p, st: jax.vmap(
+            lambda tr, s: _scan_segment(step, p, tr, s))(trace, st)
+    return jax.vmap(one)(params_batch, state)
+
+
+def sweep_resume(trace: Trace, static: StaticConfig,
+                 params_batch: MechParams, state: SimState,
+                 variant: str = "fused") -> SimState:
+    """Un-jitted batched segment: ``run_sweep``'s one-chunk body, resumed
+    from ``state`` (leading (P,) axes from ``sim_init(..., batch=P)``).
+    The jitted form is ``run_sweep_segment``."""
+    if is_tracer(trace.t_issue):
+        _note_trace(f"sweep_segment/{static.mechanism}/{variant}")
+    return _sweep_resume(trace, static, params_batch, state, variant)
+
+
+run_sweep_segment = jax.jit(sweep_resume, static_argnums=(1,),
+                            static_argnames=("variant",))
 
 
 @functools.partial(jax.jit, static_argnums=(1,), static_argnames=("variant",))
@@ -711,13 +821,11 @@ def run_sweep(trace: Trace, static: StaticConfig,
     bitwise-equal to running each params point through ``run_channel``.
     """
     _note_trace(f"sweep/{static.mechanism}/{variant}")
-    step = make_step(static, variant=variant)
-    if trace.t_issue.ndim == 1:
-        one = lambda p: _scan_one(step, p, trace, static)
-    else:
-        one = lambda p: jax.vmap(
-            lambda tr: _scan_one(step, p, tr, static))(trace)
-    return jax.vmap(one)(params_batch)
+    C = trace.t_issue.shape[0] if trace.t_issue.ndim == 2 else None
+    P = jax.tree.leaves(params_batch)[0].shape[0]
+    state = sim_init(static, channels=C, batch=P)
+    return finalize(_sweep_resume(trace, static, params_batch, state,
+                                  variant))
 
 
 def run_channel(trace: Trace, cfg: MechConfig,

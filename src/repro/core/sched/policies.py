@@ -51,7 +51,7 @@ from repro.core.timing import (GEOM, SCHED_FCFS, TICKS_PER_NS, DRAMGeometry,
                                SchedConfig)
 
 __all__ = ["SchedConfig", "SCHED_FCFS", "schedule", "frfcfs_perm",
-           "write_drain_perm"]
+           "write_drain_perm", "StreamScheduler"]
 
 
 def write_drain_perm(bank: Sequence[int], row: Sequence[int],
@@ -157,3 +157,133 @@ def schedule(trace: Trace, sc: Optional[SchedConfig],
         chans.append({k: v[c][perm] for k, v in leaves.items()})
     return Trace(**{k: np.stack([ch[k] for ch in chans])
                     for k in leaves})
+
+
+class StreamScheduler:
+    """The carried scheduler window of a chunked replay (DESIGN.md §13).
+
+    ``schedule`` needs the whole trace in hand; a streamed replay only
+    ever holds one chunk.  This class re-expresses the same two passes —
+    posted-write drain in front of the FR-FCFS window walk — as an
+    incremental pipeline whose carried state (write queue, transaction-
+    queue window, per-bank last-scheduled row, starvation counter)
+    survives chunk boundaries.  Both walks decide from a *bounded* window
+    (``drain_batch`` writes / ``queue_depth`` requests), so emitting a
+    pick only once the window is provably identical to the monolithic
+    walk's — full, or flushing at end of stream — reproduces the
+    monolithic permutation **exactly**; ``tests/test_streaming.py`` pins
+    ``feed``+``flush`` against ``schedule`` bitwise.
+
+    One instance schedules ONE channel.  ``feed`` takes (T,) trace leaves
+    (chunk-interior no-ops are dropped — they are padding, not requests;
+    the streaming driver re-packs emitted requests into fixed-shape
+    segments and re-pads itself) and returns whatever requests became
+    committable; ``flush`` drains the carried windows at end of stream.
+    """
+
+    def __init__(self, sc: Optional[SchedConfig],
+                 geom: DRAMGeometry = GEOM):
+        self.sc = sc
+        self.identity = sc is None or sc.is_identity
+        self.n_banks = geom.n_banks
+        self.wq: List[tuple] = []      # posted writes awaiting a drain
+        self.win: List[tuple] = []     # FR-FCFS transaction-queue window
+        self.last_row = [-1] * geom.n_banks
+        self.bypass = 0
+
+    @staticmethod
+    def _records(trace: Trace) -> List[tuple]:
+        t = np.asarray(trace.t_issue)
+        keep = np.flatnonzero(t < NOOP_ISSUE)
+        cols = [np.asarray(x)[keep].tolist()
+                for x in (t, trace.bank, trace.row, trace.col,
+                          trace.is_write, trace.core)]
+        return list(zip(*cols)) if keep.size else []
+
+    @staticmethod
+    def _emit(records: List[tuple]) -> Trace:
+        if not records:
+            z = np.zeros(0, np.int32)
+            return Trace(z, z, z, z, np.zeros(0, bool), z)
+        a = list(zip(*records))
+        return Trace(t_issue=np.asarray(a[0], np.int32),
+                     bank=np.asarray(a[1], np.int32),
+                     row=np.asarray(a[2], np.int32),
+                     col=np.asarray(a[3], np.int32),
+                     is_write=np.asarray(a[4], bool),
+                     core=np.asarray(a[5], np.int32))
+
+    def _drain_writes(self) -> List[tuple]:
+        # (bank, row)-sorted batch: same key as write_drain_perm's drain
+        self.wq.sort(key=lambda r: (r[1], r[2]))
+        out, self.wq = self.wq, []
+        return out
+
+    def _stage_drain(self, records: List[tuple]) -> List[tuple]:
+        if not (self.sc and self.sc.write_drain):
+            return records
+        out: List[tuple] = []
+        for r in records:
+            if r[4]:
+                self.wq.append(r)
+                if len(self.wq) >= self.sc.drain_batch:
+                    out.extend(self._drain_writes())
+            else:
+                out.append(r)
+        return out
+
+    def _frfcfs_step(self) -> tuple:
+        """One pick of the monolithic window walk (``frfcfs_perm``) from
+        the carried window — callable only when the window state equals
+        the monolithic walk's (full window, or end-of-stream)."""
+        sc, win = self.sc, self.win
+        pick = 0
+        if self.bypass < sc.starve_cap and win:
+            horizon = win[0][0] + sc.arrival_window_ns * TICKS_PER_NS
+            for k, r in enumerate(win):
+                if r[0] > horizon:
+                    continue
+                if r[2] == self.last_row[r[1]]:
+                    pick = k
+                    break
+        r = win.pop(pick)
+        self.bypass = 0 if pick == 0 else self.bypass + 1
+        self.last_row[r[1]] = r[2]
+        return r
+
+    def _stage_frfcfs(self, records: List[tuple],
+                      flush: bool) -> List[tuple]:
+        if not (self.sc and self.sc.policy == "frfcfs"):
+            return records
+        out: List[tuple] = []
+        qd = self.sc.queue_depth
+        for r in records:
+            self.win.append(r)
+            # the monolithic walk always decides from a full qd window
+            # while input remains (pick + immediate refill), so a pick is
+            # committed exactly when the carried window reaches qd
+            if len(self.win) >= qd:
+                out.append(self._frfcfs_step())
+        if flush:
+            # end of stream: the monolithic walk's window dwindles qd-1..1
+            while self.win:
+                out.append(self._frfcfs_step())
+        return out
+
+    def feed(self, trace: Trace) -> Trace:
+        """Schedule one chunk's worth of requests; returns the requests
+        whose service position is now decided (possibly spanning earlier
+        chunks, possibly empty while windows fill)."""
+        records = self._records(trace)
+        if self.identity:
+            return self._emit(records)
+        return self._emit(self._stage_frfcfs(self._stage_drain(records),
+                                             flush=False))
+
+    def flush(self) -> Trace:
+        """End of stream: drain the write queue and the FR-FCFS window."""
+        if self.identity:
+            return self._emit([])
+        tail: List[tuple] = self._drain_writes() if (
+            self.sc and self.sc.write_drain) else []
+        return self._emit(self._stage_frfcfs(tail, flush=True))

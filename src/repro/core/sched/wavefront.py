@@ -64,6 +64,7 @@ from repro.core.timing import (DDR4, GEOM, DRAMGeometry, DRAMTimings,
 from repro.kernels.jax_compat import is_tracer
 
 __all__ = ["form_waves", "linearize_waves", "wave_stats", "make_wave_step",
+           "pad_waves", "resume_waves", "run_segment_waves",
            "simulate_waves", "run_sweep_waves", "run_channel_waves"]
 
 # Default wave width: half the banks.  Wider waves raise the padded-lane
@@ -352,12 +353,75 @@ def make_wave_step(static: StaticConfig, geom: DRAMGeometry = GEOM):
     return step
 
 
+def pad_waves(wtrace: dram.Trace, n_waves: int) -> dram.Trace:
+    """Right-pad a wave-compiled (n, W) / (C, n, W) trace to ``n_waves``
+    waves with all-no-op filler waves (banks 0..W-1, inert by the §9
+    contract).  Chunked wavefront replay pads every chunk's wave count to
+    a shared bucket so all chunks reuse one compiled wave scan
+    (``core/streaming.py``)."""
+    t = np.asarray(wtrace.t_issue)
+    cur, W = t.shape[-2], t.shape[-1]
+    assert cur <= n_waves, (cur, n_waves)
+    if cur == n_waves:
+        return wtrace
+    lead = t.shape[:-2]
+    fill = {
+        "t_issue": np.full(lead + (n_waves - cur, W), dram.NOOP_ISSUE,
+                           np.int32),
+        "bank": np.broadcast_to(np.arange(W, dtype=np.int32),
+                                lead + (n_waves - cur, W)).copy(),
+        "row": np.zeros(lead + (n_waves - cur, W), np.int32),
+        "col": np.zeros(lead + (n_waves - cur, W), np.int32),
+        "is_write": np.zeros(lead + (n_waves - cur, W), bool),
+        "core": np.zeros(lead + (n_waves - cur, W), np.int32),
+    }
+    return dram.Trace(**{
+        k: np.concatenate([np.asarray(v), fill[k]], axis=-2)
+        for k, v in wtrace._asdict().items()})
+
+
+def _scan_waves_segment(step, params: MechParams, wtrace: dram.Trace,
+                        state: dram.SimState) -> dram.SimState:
+    carry, _ = jax.lax.scan(functools.partial(step, params),
+                            (state.bank, state.cnt), wtrace)
+    return dram.SimState(*carry)
+
+
 def _scan_waves(step, params: MechParams, wtrace: dram.Trace,
                 static: StaticConfig) -> dram.Counters:
-    carry0 = (dram.init_state(static), dram.init_counters())
-    (_, cnt), _ = jax.lax.scan(functools.partial(step, params), carry0,
-                               wtrace)
-    return cnt
+    carry0 = dram.SimState(dram.init_state(static), dram.init_counters())
+    return _scan_waves_segment(step, params, wtrace, carry0).cnt
+
+
+def _resume_waves(wtrace: dram.Trace, static: StaticConfig,
+                  params: MechParams, state: dram.SimState
+                  ) -> dram.SimState:
+    step = make_wave_step(static)
+    if wtrace.t_issue.ndim == 2:
+        return _scan_waves_segment(step, params, wtrace, state)
+    return jax.vmap(lambda tr, st: _scan_waves_segment(step, params, tr, st)
+                    )(wtrace, state)
+
+
+def resume_waves(wtrace: dram.Trace, static: StaticConfig,
+                 params: MechParams, state: dram.SimState) -> dram.SimState:
+    """Advance a ``dram.SimState`` over one wave-compiled chunk.
+
+    The wave scan's carry IS ``dram.SimState`` (``make_wave_step`` shares
+    the serial step's carry), so a wavefront replay chunks exactly like
+    the serial one: ``dram.sim_init`` → ``resume_waves`` per chunk (waves
+    formed per chunk by ``form_waves``) → ``dram.finalize``.  Wave
+    *packing* differs across chunk boundaries — a wave never spans two
+    chunks — but the in-wave prefix replays serial semantics lane by
+    lane, so counters stay bitwise-equal to the monolithic serial scan
+    regardless (``tests/test_streaming.py``).  Jitted form:
+    ``run_segment_waves``."""
+    if is_tracer(wtrace.t_issue):
+        dram._note_trace(f"wave_segment/{static.mechanism}")
+    return _resume_waves(wtrace, static, params, state)
+
+
+run_segment_waves = jax.jit(resume_waves, static_argnums=(1,))
 
 
 def simulate_waves(wtrace: dram.Trace, static: StaticConfig,
@@ -366,10 +430,9 @@ def simulate_waves(wtrace: dram.Trace, static: StaticConfig,
     (C, n_waves, W) leaves, one params point."""
     if is_tracer(wtrace.t_issue):
         dram._note_trace(f"wave/{static.mechanism}")
-    step = make_wave_step(static)
-    if wtrace.t_issue.ndim == 2:
-        return _scan_waves(step, params, wtrace, static)
-    return jax.vmap(lambda tr: _scan_waves(step, params, tr, static))(wtrace)
+    C = wtrace.t_issue.shape[0] if wtrace.t_issue.ndim == 3 else None
+    state = dram.sim_init(static, channels=C)
+    return dram.finalize(_resume_waves(wtrace, static, params, state))
 
 
 _simulate_waves_jit = jax.jit(simulate_waves, static_argnums=(1,))

@@ -42,7 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dram, traces, workload
+from repro.core import dram, streaming, traces, workload
 from repro.core.energy import ENERGY
 from repro.core.sched import policies as sched_policies
 from repro.core.timing import (DDR4, GEOM, DRAMTimings, MechConfig,
@@ -147,9 +147,22 @@ def run_mechanism(trace: dram.Trace, cfg: MechConfig,
     return _result_from_counters(cnt, cfg, apps, n_channels)
 
 
+def _dispatch_sweep(trace: dram.Trace, static, batch,
+                    chunk_len: int | None) -> dram.Counters:
+    """One static group's compiled dispatch: the monolithic ``run_sweep``
+    or — when ``chunk_len`` is set — the segment-carried streamed replay
+    (DESIGN.md §13), which is bitwise-identical and bounds the device
+    trace residency at O(chunk_len) regardless of trace length."""
+    if chunk_len is None:
+        return dram.run_sweep(trace, static, batch)
+    return streaming.sweep_stream(
+        streaming.iter_chunks(trace, chunk_len), static, batch)
+
+
 def sweep(trace: dram.Trace, cfgs: Sequence[MechConfig],
           apps: Sequence[traces.AppParams],
-          t: DRAMTimings = DDR4) -> List[RunResult]:
+          t: DRAMTimings = DDR4,
+          chunk_len: int | None = None) -> List[RunResult]:
     """Run an arbitrary config grid with one compiled scan per static
     structure (DESIGN.md §3).
 
@@ -161,7 +174,9 @@ def sweep(trace: dram.Trace, cfgs: Sequence[MechConfig],
     compilation per group instead of N — controller grids replay
     reordered copies of the trace through the same compiled scan.
     Results come back in input order and are bitwise-identical to
-    per-config ``run_mechanism``.
+    per-config ``run_mechanism``.  ``chunk_len`` streams each group
+    through the segment-carried scan instead (same results bitwise;
+    DESIGN.md §13) for traces too long to replay monolithically.
     """
     multi = np.asarray(trace.t_issue).ndim == 2
     n_channels = np.asarray(trace.t_issue).shape[0] if multi else 1
@@ -172,7 +187,7 @@ def sweep(trace: dram.Trace, cfgs: Sequence[MechConfig],
             scheduled[sc] = sched_policies.schedule(trace, sc)
         batch = jax.tree.map(lambda *xs: jnp.stack(xs),
                              *[cfgs[i].params(t) for i in idxs])
-        cnts = dram.run_sweep(scheduled[sc], static, batch)
+        cnts = _dispatch_sweep(scheduled[sc], static, batch, chunk_len)
         results = _results_from_counters_batch(
             cnts, [cfgs[i] for i in idxs], apps, n_channels)
         for j, i in enumerate(idxs):
@@ -200,7 +215,8 @@ def _static_groups(cfgs: Sequence[MechConfig]) -> Dict[object, List[int]]:
 
 def sweep_traces(trs: Sequence, cfgs: Sequence[MechConfig],
                  apps_list=None,
-                 t: DRAMTimings = DDR4) -> List[List[RunResult]]:
+                 t: DRAMTimings = DDR4,
+                 chunk_len: int | None = None) -> List[List[RunResult]]:
     """Cross-workload batching: W traces x N configs in one compiled scan
     per static structure (ROADMAP: collapse figs 7/8).
 
@@ -223,6 +239,13 @@ def sweep_traces(trs: Sequence, cfgs: Sequence[MechConfig],
     omitted when every entry is a spec (each spec supplies its own
     ``apps()``); with mixed entries, pass ``None`` per spec position to
     use the spec's apps.
+
+    Padding no-ops are a *suffix* here only by convention — interior
+    no-ops (e.g. the chunk-tail fillers a codec-decoded stream carries)
+    are equally counter-inert in every scan variant
+    (``tests/test_streaming.py`` pins this), and ``chunk_len`` streams
+    the stacked workloads through the segment-carried scan exactly like
+    ``sweep``'s.
     """
     trs = list(trs)
     assert trs, "need at least one workload"
@@ -271,7 +294,8 @@ def sweep_traces(trs: Sequence, cfgs: Sequence[MechConfig],
     for (static, sc), idxs in _static_groups(cfgs).items():
         batch = jax.tree.map(lambda *xs: jnp.stack(xs),
                              *[cfgs[i].params(t) for i in idxs])
-        cnts = dram.run_sweep(flat_for(sc), static, batch)  # (P, W*C, ...)
+        cnts = _dispatch_sweep(flat_for(sc), static, batch,
+                               chunk_len)  # (P, W*C, ...)
         C = n_channels
         for w in range(W):
             # slice workload w back out; single-channel inputs also drop the

@@ -10,7 +10,8 @@ generator in ``core/traces.py`` survives as the statistical oracle the
 zipf_reuse family is validated against.
 """
 from repro.core.workload.generators import (GEN_TRACE_LOG, gen_trace_count,
-                                            generate, generate_many)
+                                            generate, generate_many,
+                                            generate_stream)
 from repro.core.workload.params import (FAMILIES, MAX_CONTEXTS, SEG16, SPR,
                                         CoreWorkload, WorkloadParams,
                                         WorkloadSpec, content_hash, preset,
@@ -22,5 +23,6 @@ __all__ = [
     "CoreWorkload", "WorkloadParams", "WorkloadSpec",
     "content_hash", "preset", "spec_from_apps",
     "GEN_TRACE_LOG", "gen_trace_count", "generate", "generate_many",
+    "generate_stream",
     "characterize", "summarize",
 ]

@@ -33,11 +33,13 @@ itself survives in ``core/traces.py`` as the reference distribution.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Dict, List, Sequence
+from typing import Dict, Iterator, List, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.dram import NOOP_ISSUE, Trace
 from repro.core.timing import GEOM, DRAMGeometry
@@ -377,3 +379,35 @@ def generate_many(specs: Sequence[WorkloadSpec],
         for j, i in enumerate(idxs):
             out[i] = jax.tree.map(lambda a, j=j: a[j], trs)
     return out
+
+
+def generate_stream(spec: WorkloadSpec, epochs: int,
+                    geom: DRAMGeometry = GEOM,
+                    epoch_gap: int = 64) -> Iterator[Trace]:
+    """Unbounded trace synthesis: yield ``epochs`` successive ``(C, T)``
+    segments forming ONE continuous arrival stream (DESIGN.md §13).
+
+    The monolithic ``generate`` is bounded by device memory (and by the
+    audit's ``TRACE_LEN_BOUND``); streamed replay is not.  Each epoch
+    re-runs the spec's compiled generator with an epoch-mixed seed — the
+    seed is a *traced* argument, so every epoch reuses the one compiled
+    program of the spec's static structure — and the carried clock offset
+    shifts the epoch's real arrival times past the previous epoch's, so
+    the concatenated segments form one monotone-in-origin arrival process
+    per channel.  No-op padding entries stay at the sentinel (chunk-
+    interior no-ops are counter-inert, pinned by tests/test_streaming.py).
+    Shifted clocks saturate at ``NOOP_ISSUE - 64`` — the same
+    float32-exact clamp ``_assemble`` applies — rather than ever turning
+    a real request into a no-op."""
+    cap = np.int64(NOOP_ISSUE - 64)
+    offset = np.int64(0)
+    for e in range(epochs):
+        ep = dataclasses.replace(
+            spec, seed=(spec.seed + 7919 * e) & 0x7FFFFFFF)
+        tr = jax.tree.map(np.asarray, generate(ep, geom))
+        t = tr.t_issue.astype(np.int64)
+        real = t < NOOP_ISSUE
+        shifted = np.where(real, np.minimum(t + offset, cap), t)
+        yield tr._replace(t_issue=shifted.astype(np.int32))
+        if real.any():
+            offset = min(offset + t[real].max() + epoch_gap, cap)
