@@ -52,6 +52,17 @@ full mode, the capability the monolithic path cannot offer at all: a
 O(chunk) device trace residency.  Codec compression on the measured trace
 rides along.  Written to ``BENCH_streaming.json`` (also published by CI).
 
+The SHARDED SWEEP section (DESIGN.md §14) measures the fault-tolerant
+orchestrator (``launch/orchestrator.py``) against the monolithic
+``simulator.sweep_traces`` on the fig-12 x fig-13 cross grid: the
+orchestration tax (manifest + per-segment checkpoints + mesh placement)
+is recorded as a steps/sec ratio, the orchestrated counters are asserted
+bitwise equal to the monolithic oracle, a kill-and-resume pass records
+the resume overhead (also bitwise-checked), and the whole orchestrated
+run is held to the ``orchestrator.shard-sweep`` compile contract (at most
+ONE fresh compilation).  Written to ``BENCH_shardsweep.json`` (also
+published by CI).
+
 Compilations are counted via ``dram.JIT_TRACE_LOG`` (the scan body logs one
 entry per trace).
 """
@@ -82,6 +93,7 @@ BENCH_JSON = "BENCH_hotloop.json"
 BENCH_WAVE_JSON = "BENCH_wavefront.json"
 BENCH_TRACEGEN_JSON = "BENCH_tracegen.json"
 BENCH_STREAM_JSON = "BENCH_streaming.json"
+BENCH_SHARD_JSON = "BENCH_shardsweep.json"
 # the wavefront scheduler's bank-level-parallelism window (DESIGN.md §10)
 WAVE_LOOKAHEAD = 32
 
@@ -384,6 +396,103 @@ def _streaming_report(tr_small):
     return report
 
 
+def _shardsweep_report():
+    """Sharded orchestrated sweep vs the monolithic engine on the fig-12 x
+    fig-13 cross grid (DESIGN.md §14), written to ``BENCH_shardsweep.json``.
+
+    The orchestrator's value is durability, not speed — so the recorded
+    ``shardsweep_relative`` is the honest price of the manifest writes,
+    per-segment checkpoints, and mesh placement, while the bitwise check
+    proves the price buys no semantics change.  The kill-and-resume pass
+    measures a run killed mid-shard and resumed (``resume_overhead`` =
+    killed+resumed wall / uninterrupted wall; the checkpointed prefix is
+    reused, so this stays near 1 + one shard's re-tail).  The whole
+    orchestrated run must fit the ``orchestrator.shard-sweep`` compile
+    contract: sharding never splits or merges compilation units."""
+    import tempfile
+
+    from repro.core import simulator
+    from repro.launch import orchestrator
+    from repro.launch.mesh import make_sweep_mesh
+    from repro.runtime.faults import FaultEvent, FaultPlan, InjectedKill
+
+    if common.IS_QUICK:
+        grid = [dict(cache_rows=cr, seg_blocks=sb)
+                for cr in (8, 32) for sb in (16, 64)]
+        per_channel, chunk = 2048, 1024
+    else:
+        grid = [dict(**c, **s)
+                for c in CAPACITY_GRID for s in SEGMENT_GRID]
+        per_channel, chunk = 16_384, 4096
+    cfgs = [paper_config("figcache_fast", **kw) for kw in grid]
+    specs = [workload.preset("zipf_reuse", n_cores=2, n_channels=2,
+                             per_channel=per_channel, seed=21),
+             workload.preset("stream", n_cores=2, n_channels=2,
+                             per_channel=per_channel, seed=22)]
+    n_steps = len(cfgs) * len(specs) * 2 * per_channel
+
+    oracle = simulator.sweep_traces(specs, cfgs, chunk_len=chunk)  # warm
+    t0 = time.time()
+    simulator.sweep_traces(specs, cfgs, chunk_len=chunk)
+    t_mono = time.time() - t0
+
+    plan = orchestrator.make_plan(specs, cfgs, chunk_len=chunk)
+    j0 = dram.jit_trace_count()
+    with tempfile.TemporaryDirectory() as d:               # warm + contract
+        orch = orchestrator.Orchestrator(plan, d, backoff_s=0.0)
+        counts = orch.run()
+        assert counts == {"done": len(plan.shards)}, counts
+        got = orch.counters_by_config()
+    jits = dram.jit_trace_count() - j0
+    contracts.assert_jit_budget("orchestrator.shard-sweep", jits)
+    assert len(got) == len(specs) * len(cfgs)
+    for (w, i), cnt in got.items():
+        _assert_counters_equal(oracle[w][i].counters, cnt,
+                               f"shardsweep[{w},{i}]")
+    with tempfile.TemporaryDirectory() as d:               # timed, warm
+        t0 = time.time()
+        orchestrator.Orchestrator(plan, d, backoff_s=0.0).run()
+        t_orch = time.time() - t0
+
+    # ---- kill mid-shard, resume in a "new process", same bits -------------
+    fp = FaultPlan([FaultEvent(kind="kill", shard=0, segment=1,
+                               mode="raise")])
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.time()
+        try:
+            orchestrator.Orchestrator(plan, d, fault_plan=fp,
+                                      backoff_s=0.0).run()
+            raise AssertionError("injected kill did not fire")
+        except InjectedKill:
+            pass
+        orch2 = orchestrator.Orchestrator(plan, d, fault_plan=fp,
+                                          backoff_s=0.0)
+        assert orch2.run() == {"done": len(plan.shards)}
+        t_killed = time.time() - t0
+        got2 = orch2.counters_by_config()
+    assert set(got2) == set(got)
+    for k, cnt in got2.items():
+        _assert_counters_equal(got[k], cnt, f"shardsweep-resume{k}")
+
+    P = max(len(s.cfg_idxs) for s in plan.shards)
+    mesh = make_sweep_mesh(P, 2)
+    return {
+        "shardsweep_configs": len(cfgs),
+        "shardsweep_workloads": len(specs),
+        "shardsweep_n_shards": len(plan.shards),
+        "shardsweep_chunk_len": chunk,
+        "shardsweep_steps": n_steps,
+        "n_devices": len(jax.devices()),
+        "mesh_shape": "x".join(f"{k}={v}" for k, v in mesh.shape.items()),
+        "steps_per_sec_monolithic": round(n_steps / t_mono),
+        "steps_per_sec_orchestrated": round(n_steps / t_orch),
+        "shardsweep_relative": round(t_mono / t_orch, 3),
+        "jits_shardsweep": jits,
+        "resume_overhead": round(t_killed / t_orch, 2),
+        "shardsweep_quick": common.IS_QUICK,
+    }
+
+
 def run():
     cfgs = [paper_config("figcache_fast", **kw) for kw in GRID]
     static = shared_static(cfgs)
@@ -450,6 +559,12 @@ def run():
         json.dump(stream, f, indent=2, sort_keys=True)
         f.write("\n")
 
+    # ---- fault-tolerant sharded orchestration (§14) -----------------------
+    shard = _shardsweep_report()
+    with open(BENCH_SHARD_JSON, "w") as f:
+        json.dump(shard, f, indent=2, sort_keys=True)
+        f.write("\n")
+
     n = len(cfgs)
     summary = {
         "n_configs": n,
@@ -464,6 +579,8 @@ def run():
         "wavefront_speedup": wavefront["wavefront_speedup"],
         "tracegen_speedup": tracegen["tracegen_speedup"],
         "streaming_relative": stream["streaming_relative"],
+        "shardsweep_relative": shard["shardsweep_relative"],
+        "resume_overhead": shard["resume_overhead"],
     }
     with open(BENCH_JSON, "w") as f:
         json.dump(summary, f, indent=2, sort_keys=True)

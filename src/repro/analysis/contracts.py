@@ -180,6 +180,27 @@ def _c_chunked_replay() -> int:
     return dram.jit_trace_count() - j0
 
 
+@contract("orchestrator.shard-sweep",
+          "a sharded orchestrated sweep dispatches each shard through the "
+          "ONE compiled segment step its (static, sched) group owns: a "
+          "whole shard — checkpoints, resume, mesh placement included — "
+          "costs at most one fresh compilation (DESIGN.md §14)", 1,
+          ("StaticConfig", "sched policy", "segment/batch shapes"))
+def _c_shard_sweep() -> int:
+    import tempfile
+    from repro.core import dram, workload
+    from repro.core.timing import paper_config
+    from repro.launch import orchestrator
+    specs = [workload.preset("zipf_reuse", n_cores=2, n_channels=2,
+                             per_channel=192, seed=9)]
+    cfgs = [paper_config("figcache_fast", cache_rows=cr) for cr in (16, 32)]
+    plan = orchestrator.make_plan(specs, cfgs, chunk_len=64)
+    j0 = dram.jit_trace_count()
+    with tempfile.TemporaryDirectory() as d:
+        orchestrator.Orchestrator(plan, d, backoff_s=0.0).run()
+    return dram.jit_trace_count() - j0
+
+
 @contract("workload.generate_many",
           "a workload grid sharing one generator structure synthesizes as "
           "ONE vmapped compiled call", 1,

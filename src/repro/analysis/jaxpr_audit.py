@@ -129,6 +129,23 @@ SIM_CARRY_BOUNDS: Dict[str, CarryBound] = {
                             step=256),
 }
 
+# The orchestrator's shard step (launch/orchestrator.py, DESIGN.md §14)
+# wraps the simulator scan — same carry, same bounds — and adds two int32
+# progress accumulators OUTSIDE the scan (per-segment host loop, one add per
+# compiled step).  Their bounds are declared here so the contract is
+# reviewable even though they never enter a scan carry:
+#   seg_done  += 1 per segment           <= TRACE_LEN_BOUND segments
+#   reqs_done += sum(real reqs in chunk) <= TRACE_LEN_BOUND * channels,
+#               capped by the declared 2**27 stream-request ceiling.
+ORCH_CARRY_BOUNDS: Dict[str, CarryBound] = {
+    **SIM_CARRY_BOUNDS,
+    "seg_done":  CarryBound("one increment per segment; segment count <= "
+                            "TRACE_LEN_BOUND", abs_max=TRACE_LEN_BOUND),
+    "reqs_done": CarryBound("real-request count across the shard's stream "
+                            "< 2**27 by the sweep-plan contract",
+                            abs_max=1 << 27),
+}
+
 
 # ---------------------------------------------------------------------------
 # jaxpr plumbing
@@ -576,6 +593,26 @@ def _trace_run_segment(variant: str, channels: int = 0, batch: int = 0):
                                      variant=variant))(tr, p, st)
 
 
+def _trace_shard_step(channels: int = 2, batch: int = 4):
+    """Abstract-trace the orchestrator's per-segment shard advance
+    (``orchestrator.shard_step``: ``dram.sweep_resume`` + the two progress
+    accumulators).  The embedded scan is the simulator carry, so
+    ``SIM_CARRY_BOUNDS`` audit it; the accumulators sit outside the scan
+    and are covered by the dtype checks plus the declared
+    ``ORCH_CARRY_BOUNDS``."""
+    from repro.core.timing import paper_config
+    from repro.launch import orchestrator
+
+    static = paper_config("figcache_fast").static
+    tr = _abstract_trace(256, channels)
+    pb = _abstract_params(batch=batch)
+    prog = jax.eval_shape(
+        lambda: orchestrator.init_progress(static, batch, channels))
+    return jax.make_jaxpr(
+        lambda t, p, s: orchestrator.shard_step(t, static, p, s))(tr, pb,
+                                                                  prog)
+
+
 def _workload_entry():
     """Trace the program ``workload.generate``/``generate_many`` compile:
     the un-jitted generator of one representative static structure."""
@@ -634,6 +671,9 @@ def default_entries() -> List[Entry]:
         Entry("dram.run_sweep_segment[multi-channel]",
               lambda: _trace_run_segment("fused", channels=2, batch=4),
               carry_names=names, carry_bounds=SIM_CARRY_BOUNDS),
+        Entry("orchestrator.shard_step[sharded]",
+              lambda: _trace_shard_step(channels=2, batch=4),
+              carry_names=names, carry_bounds=ORCH_CARRY_BOUNDS),
         Entry("workload.generate_many", _workload_entry),
         Entry("kernels.fts_lookup_op",
               lambda: _kernel_entry("fts_lookup")),

@@ -1,3 +1,5 @@
 from repro.checkpoint.checkpoint import (save_checkpoint, restore_checkpoint,
-                                         latest_step, AsyncCheckpointer,
+                                         latest_step, committed_steps,
+                                         restore_latest, CheckpointError,
+                                         AsyncCheckpointer,
                                          save_sim_state, restore_sim_state)  # noqa

@@ -10,6 +10,15 @@ failed node are invisible.  The async writer moves host serialization off the
 training thread (overlap with compute).  On a real multi-host deployment each
 host writes only the shards it owns (addressable_shards); on the single-host
 dry-run environment leaves arrive fully-addressable and are written whole.
+
+Validation is load-bearing (DESIGN.md §14): ``restore_checkpoint`` verifies
+the stored treedef string and every leaf's shape/dtype against the ``like``
+structure and raises ``CheckpointError`` on any mismatch or unreadable file —
+a structure mismatch with an equal leaf count must never restore garbage
+silently, and the checks must survive ``python -O`` (no bare ``assert``).
+``restore_latest`` walks the committed steps newest-first and *skips* any
+step that fails validation, so a corrupted latest checkpoint degrades to the
+previous committed one instead of killing the resume.
 """
 from __future__ import annotations
 
@@ -17,10 +26,15 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Optional
+from typing import Any, List, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint failed validation: uncommitted/corrupt files, or a
+    structure (treedef / leaf shape / leaf dtype) mismatch with ``like``."""
 
 
 def _leaves_with_paths(tree):
@@ -56,40 +70,145 @@ def save_checkpoint(path: str, step: int, state: Any,
     os.rename(tmp, d)
 
 
-def latest_step(path: str) -> Optional[int]:
-    if not os.path.isdir(path):
+def _step_of(name: str) -> Optional[int]:
+    """``step_<N>`` directory name -> N; None for anything else (stale
+    ``step_<N>.tmp`` spills, junk names)."""
+    if not name.startswith("step_") or name.endswith(".tmp"):
         return None
+    try:
+        return int(name.split("_", 1)[1])
+    except ValueError:
+        return None
+
+
+def committed_steps(path: str) -> List[int]:
+    """Committed step numbers under ``path``, newest first.  Uncommitted
+    and partially-written directories (a mid-write kill leaves a
+    ``step_N.tmp`` or a markerless ``step_N``) are invisible."""
+    if not os.path.isdir(path):
+        return []
     steps = []
     for name in os.listdir(path):
-        if name.startswith("step_") and not name.endswith(".tmp") and \
+        step = _step_of(name)
+        if step is not None and \
                 os.path.exists(os.path.join(path, name, "COMMITTED")):
-            steps.append(int(name.split("_")[1]))
-    return max(steps) if steps else None
+            steps.append(step)
+    return sorted(steps, reverse=True)
+
+
+def latest_step(path: str) -> Optional[int]:
+    steps = committed_steps(path)
+    return steps[0] if steps else None
+
+
+def _leaf_shape(leaf):
+    shape = getattr(leaf, "shape", None)
+    return None if shape is None else tuple(int(s) for s in shape)
+
+
+def _leaf_dtype(leaf):
+    dt = getattr(leaf, "dtype", None)
+    return None if dt is None else str(dt)
 
 
 def restore_checkpoint(path: str, step: int, like: Any,
                        shardings: Any = None) -> tuple[Any, dict]:
-    """Restore into the structure of `like` (abstract or concrete pytree)."""
+    """Restore into the structure of ``like`` (abstract or concrete pytree).
+
+    Every stored leaf is validated against ``like``'s treedef, shapes and
+    dtypes; any mismatch, missing file or unreadable array raises
+    ``CheckpointError`` — never a silent garbage restore.
+    """
     d = os.path.join(path, f"step_{step}")
-    assert os.path.exists(os.path.join(d, "COMMITTED")), f"uncommitted: {d}"
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
+    if not os.path.exists(os.path.join(d, "COMMITTED")):
+        raise CheckpointError(f"uncommitted checkpoint: {d}")
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        raise CheckpointError(f"unreadable manifest under {d}: {e}") from e
     flat, treedef = _leaves_with_paths(like)
-    assert manifest["n_leaves"] == len(flat), "structure mismatch"
+    if manifest.get("n_leaves") != len(flat):
+        raise CheckpointError(
+            f"structure mismatch: checkpoint {d} holds "
+            f"{manifest.get('n_leaves')} leaves, `like` has {len(flat)}")
+    stored_treedef = manifest.get("treedef")
+    if stored_treedef is not None and stored_treedef != str(treedef):
+        raise CheckpointError(
+            f"treedef mismatch under {d}:\n  stored: {stored_treedef}\n"
+            f"  like:   {treedef}")
+    leaves_meta = manifest.get("leaves", [])
+    if len(leaves_meta) != len(flat):
+        raise CheckpointError(
+            f"manifest under {d} records {len(leaves_meta)} leaf entries "
+            f"for {len(flat)} leaves")
     out = []
     sh_flat = jax.tree.leaves(shardings) if shardings is not None else \
         [None] * len(flat)
     import ml_dtypes  # noqa: F401  (registers bfloat16 with numpy)
     for i, target in enumerate(flat):
-        arr = np.load(os.path.join(d, f"leaf_{i}.npy"))
-        want = manifest["leaves"][i]["dtype"]
-        if str(arr.dtype) != want:
-            arr = arr.astype(want)
+        meta = leaves_meta[i]
+        want_shape = tuple(meta["shape"])
+        want_dtype = str(meta["dtype"])
+        t_shape, t_dtype = _leaf_shape(target), _leaf_dtype(target)
+        if t_shape is not None and t_shape != want_shape:
+            raise CheckpointError(
+                f"leaf {i} shape mismatch under {d}: stored {want_shape}, "
+                f"`like` expects {t_shape}")
+        if t_dtype is not None and t_dtype != want_dtype:
+            raise CheckpointError(
+                f"leaf {i} dtype mismatch under {d}: stored {want_dtype}, "
+                f"`like` expects {t_dtype}")
+        try:
+            arr = np.load(os.path.join(d, f"leaf_{i}.npy"))
+        except (OSError, ValueError, EOFError) as e:
+            raise CheckpointError(
+                f"leaf_{i}.npy unreadable under {d}: {e}") from e
+        if tuple(arr.shape) != want_shape:
+            raise CheckpointError(
+                f"leaf_{i}.npy under {d} holds shape {tuple(arr.shape)}, "
+                f"manifest records {want_shape} (truncated write?)")
+        if str(arr.dtype) != want_dtype:
+            arr = arr.astype(want_dtype)
         if sh_flat[i] is not None:
             out.append(jax.device_put(arr, sh_flat[i]))
         else:
             out.append(arr)
     return jax.tree.unflatten(treedef, out), manifest["extra"]
+
+
+def restore_latest(path: str, like: Any, *, kind: Optional[str] = None,
+                   shardings: Any = None) -> tuple[Any, int, dict]:
+    """Restore the newest committed checkpoint that passes validation.
+
+    Walks ``committed_steps`` newest-first and *skips* any step whose
+    restore raises ``CheckpointError`` (truncated leaf, corrupt manifest,
+    structure mismatch) — a corrupted latest checkpoint falls back to the
+    previous committed one.  ``kind`` additionally requires the manifest's
+    ``extra["kind"]`` tag to match (a wrong-kind step is an error, not a
+    fallback: it means the directory is being shared across state kinds).
+    Returns ``(state, step, extra)``; raises ``CheckpointError`` when no
+    committed step survives validation.
+    """
+    steps = committed_steps(path)
+    if not steps:
+        raise CheckpointError(f"no committed checkpoint under {path}")
+    last_err: Optional[CheckpointError] = None
+    for step in steps:
+        try:
+            state, extra = restore_checkpoint(path, step, like,
+                                              shardings=shardings)
+        except CheckpointError as e:
+            last_err = e
+            continue
+        if kind is not None and extra.get("kind", kind) != kind:
+            raise CheckpointError(
+                f"step_{step} under {path} holds kind "
+                f"{extra.get('kind')!r}, expected {kind!r}")
+        return state, step, extra
+    raise CheckpointError(
+        f"every committed checkpoint under {path} failed validation; "
+        f"last error: {last_err}")
 
 
 class AsyncCheckpointer:
@@ -142,10 +261,16 @@ def restore_sim_state(path: str, like: Any,
     ``like`` supplies the pytree structure — a fresh ``dram.sim_init``
     with the run's static/channel layout.  Returns ``(state, chunk)``;
     pass ``chunk`` as the streaming driver's ``start_chunk`` to skip the
-    already-simulated segments."""
-    if step is None:
-        step = latest_step(path)
-        assert step is not None, f"no committed checkpoint under {path}"
-    state, meta = restore_checkpoint(path, step, like)
-    assert meta.get("kind", "simstate") == "simstate", meta
+    already-simulated segments.  With ``step=None`` a corrupted newest
+    step falls back to the previous committed one (``restore_latest``),
+    so ``streaming.resume_stream`` survives checkpoint corruption by
+    re-simulating from the last intact snapshot."""
+    if step is not None:
+        state, meta = restore_checkpoint(path, step, like)
+        if meta.get("kind", "simstate") != "simstate":
+            raise CheckpointError(
+                f"step_{step} under {path} is not a simstate checkpoint: "
+                f"{meta}")
+        return state, int(meta.get("chunk", step))
+    state, step, meta = restore_latest(path, like, kind="simstate")
     return state, int(meta.get("chunk", step))

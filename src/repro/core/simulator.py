@@ -195,7 +195,7 @@ def sweep(trace: dram.Trace, cfgs: Sequence[MechConfig],
     return out
 
 
-def _static_groups(cfgs: Sequence[MechConfig]) -> Dict[object, List[int]]:
+def static_groups(cfgs: Sequence[MechConfig]) -> Dict[object, List[int]]:
     """Group a config grid for batched dispatch: configs sharing a
     ``static_group_key`` (mechanism/policy/fts_kernel) AND a controller
     (``cfg.sched``) go to ONE group and the group's shared static is the
@@ -211,6 +211,12 @@ def _static_groups(cfgs: Sequence[MechConfig]) -> Dict[object, List[int]]:
         keyed.setdefault((static_group_key(cfg), cfg.sched), []).append(i)
     return {(shared_static([cfgs[i] for i in idxs]), sc): idxs
             for (_, sc), idxs in keyed.items()}
+
+
+# the grouping is public API now: the sweep orchestrator
+# (launch/orchestrator.py, DESIGN.md §14) builds its durable work shards
+# from exactly these compilation units
+_static_groups = static_groups
 
 
 def sweep_traces(trs: Sequence, cfgs: Sequence[MechConfig],

@@ -245,18 +245,31 @@ def resume_stream(segments: Iterable[dram.Trace], cfg: MechConfig,
 
 def sweep_stream(segments: Iterable[dram.Trace],
                  static, params_batch, *, variant: str = "fused",
-                 state: Optional[dram.SimState] = None) -> dram.Counters:
+                 state: Optional[dram.SimState] = None,
+                 start_chunk: int = 0,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 0) -> dram.Counters:
     """Batched streamed replay: ``dram.run_sweep``'s semantics over a
     segment stream (params leaves (P,)), one compiled step for all
     segments.  Callers pre-schedule or stream identity-order traces —
-    the sweep layer (``simulator.sweep``) owns controller grouping."""
+    the sweep layer (``simulator.sweep``) owns controller grouping.
+
+    ``state``/``start_chunk``/``checkpoint_dir``/``checkpoint_every``
+    mirror ``simulate_stream``: the batched carry checkpoints through the
+    same substrate, so a killed sweep resumes mid-trace (the orchestrator,
+    DESIGN.md §14, layers shard-level durability on top of this)."""
     P = jax.tree.leaves(params_batch)[0].shape[0]
-    for seg in segments:
+    for i, seg in enumerate(segments):
+        if i < start_chunk:
+            continue
         if state is None:
             sh = np.asarray(seg.t_issue).shape
             state = dram.sim_init(static, batch=P,
                                   channels=sh[0] if len(sh) == 2 else None)
         state = dram.run_sweep_segment(seg, static, params_batch, state,
                                        variant=variant)
+        if checkpoint_dir and checkpoint_every and \
+                (i + 1) % checkpoint_every == 0:
+            ckpt_lib.save_sim_state(checkpoint_dir, i + 1, state)
     assert state is not None, "empty segment stream"
     return dram.finalize(state)

@@ -1,2 +1,6 @@
 from repro.runtime.fault_tolerance import (HeartbeatMonitor, StepRunner,
                                            ElasticPlanner)  # noqa: F401
+from repro.runtime.faults import (FaultError, InjectedTransient,
+                                  InjectedDeviceLoss, InjectedKill,
+                                  LogicalClock, FaultEvent, FaultPlan,
+                                  seeded_plan, corrupt_checkpoint)  # noqa: F401

@@ -73,6 +73,12 @@ class HeartbeatMonitor:
     def alive_workers(self) -> List[str]:
         return [w for w, h in self.health.items() if h.alive]
 
+    def add_worker(self, worker: str):
+        """Register a worker spun up after construction (straggler re-issue
+        spawns a fresh logical worker per attempt)."""
+        if worker not in self.health:
+            self.health[worker] = WorkerHealth(last_beat=self.now())
+
 
 @dataclasses.dataclass(frozen=True)
 class ElasticPlan:
@@ -121,18 +127,50 @@ class ElasticPlanner:
 
 
 class StepRunner:
-    """Retry/checkpoint wrapper around a jitted step function."""
+    """Retry/checkpoint wrapper around a jitted step function.
+
+    On failure the runner restores the latest COMMITTED checkpoint (when a
+    checkpointer is configured) so the retry re-runs from durable state
+    instead of a possibly-poisoned in-memory carry, and backs off
+    exponentially (``backoff_s * 2**attempt``) between attempts.  ``sleep``
+    is injectable so fault-injection tests stay wall-clock free.
+    """
 
     def __init__(self, step_fn, *, checkpointer=None, monitor=None,
                  worker: str = "w0", max_retries: int = 2,
-                 ckpt_every: int = 100):
+                 ckpt_every: int = 100, backoff_s: float = 0.05,
+                 sleep: Callable[[float], None] = time.sleep):
         self.step_fn = step_fn
         self.ckpt = checkpointer
         self.monitor = monitor
         self.worker = worker
         self.max_retries = max_retries
         self.ckpt_every = ckpt_every
+        self.backoff_s = backoff_s
+        self.sleep = sleep
         self.failures = 0
+        self.restores = 0
+
+    def _restore_latest(self, state):
+        """Latest COMMITTED checkpoint, or the in-memory state when none
+        exists (or the checkpoint dir is unreadable)."""
+        if self.ckpt is None:
+            return state
+        from repro import checkpoint as ckpt_mod
+        try:
+            self.ckpt.wait()
+        except Exception:
+            pass                      # a failed async write is not fatal here
+        step = ckpt_mod.latest_step(self.ckpt.path)
+        if step is None:
+            return state
+        try:
+            restored, _ = ckpt_mod.restore_checkpoint(
+                self.ckpt.path, step, like=state)
+        except ckpt_mod.CheckpointError:
+            return state
+        self.restores += 1
+        return restored
 
     def run(self, step: int, state, batch, extra=None):
         for attempt in range(self.max_retries + 1):
@@ -150,4 +188,7 @@ class StepRunner:
                 self.failures += 1
                 if attempt == self.max_retries:
                     raise
+                if self.backoff_s:
+                    self.sleep(self.backoff_s * (2 ** attempt))
+                state = self._restore_latest(state)
         raise RuntimeError("unreachable")
