@@ -26,6 +26,9 @@ ap.add_argument("--scenario", default="app",
                 choices=("app",) + workload.FAMILIES,
                 help="workload: the mcf app trace (default) or a "
                      "device-generated scenario family")
+ap.add_argument("--telemetry", action="store_true",
+                help="also stream a telemetry-enabled FIGCache run and "
+                     "print the per-window hit-rate table (DESIGN.md §15)")
 args, _ = ap.parse_known_args()
 
 # --- 1. paper reproduction: FIGCache vs Base -------------------------------
@@ -43,6 +46,26 @@ print(f"[1] {label} speedup: FIGCache-Fast {s['figcache_fast']:.3f}x "
       f"(LISA-VILLA {s['lisa_villa']:.3f}x)  "
       f"row-hit {res['base'].row_hit_rate:.2f} -> "
       f"{res['figcache_fast'].row_hit_rate:.2f}")
+
+# --- 1t. optional: the same mechanism, watched through telemetry windows --
+if args.telemetry:
+    import dataclasses
+
+    from repro.core import streaming
+    from repro.core.timing import paper_config
+    from repro.obs.telemetry import WindowCollector, window_table
+
+    fam = "zipf_reuse" if args.scenario == "app" else args.scenario
+    spec = workload.preset(fam, n_cores=1, n_channels=1,
+                           per_channel=N_REQS, seed=1)
+    tr = jax.tree.map(lambda a: a[0], workload.generate(spec))
+    cfg = dataclasses.replace(paper_config("figcache_fast"),
+                              telemetry=max(32, N_REQS // 16))
+    col = WindowCollector()
+    streaming.simulate_stream(
+        streaming.iter_chunks(tr, max(64, N_REQS // 8)), cfg, telemetry=col)
+    print(f"[1t] per-window telemetry ({fam}, period {cfg.telemetry} reqs):")
+    print(window_table(col.series(), max_rows=12))
 
 # --- 2. FIGARO: fine-grained relocation between slow pool and fast pool ---
 from repro.kernels.figaro_reloc.ops import reloc_segments

@@ -201,6 +201,31 @@ def _c_shard_sweep() -> int:
     return dram.jit_trace_count() - j0
 
 
+@contract("obs.telemetry-sweep",
+          "a telemetry-enabled capacity sweep streams chunked through ONE "
+          "compiled telemetry step: the TelemetryWindows carry extension "
+          "and the per-step frame outputs do not split the compilation "
+          "cache across chunks or grid points (DESIGN.md §15)", 1,
+          ("StaticConfig (incl. telemetry period)", "variant",
+           "segment/batch shapes"))
+def _c_telemetry_sweep() -> int:
+    import dataclasses
+    from repro.core import dram, streaming
+    from repro.core.timing import paper_config, shared_static
+    from repro.obs.telemetry import WindowCollector
+    cfgs = [dataclasses.replace(paper_config("figcache_fast", **kw),
+                                telemetry=64) for kw in CAPACITY_GRID]
+    static = shared_static(cfgs)
+    tr = _toy_trace()
+    col = WindowCollector()
+    j0 = dram.jit_trace_count()
+    jax.block_until_ready(streaming.sweep_stream(
+        streaming.iter_chunks(tr, 64), static, _stack_params(cfgs),
+        telemetry=col))
+    assert col.n_segments == 4 and len(col.series(index=(0,))["win_idx"])
+    return dram.jit_trace_count() - j0
+
+
 @contract("workload.generate_many",
           "a workload grid sharing one generator structure synthesizes as "
           "ONE vmapped compiled call", 1,

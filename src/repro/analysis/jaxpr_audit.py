@@ -146,6 +146,35 @@ ORCH_CARRY_BOUNDS: Dict[str, CarryBound] = {
                             abs_max=1 << 27),
 }
 
+# Telemetry extension of the segment carry (``dram._TelScan`` leaves,
+# DESIGN.md §15; only ``StaticConfig.telemetry > 0`` programs carry them).
+# The packed scalar lane reuses the ``lat_sum_ns`` saturation story: each
+# per-step delta is bounded only by simulated time (the latency lanes), so
+# the whole (11,) vector clamps at ``dram.LAT_SUM_CAP`` and the pre-clamp
+# add stays within ``LAT_SUM_CAP + T_MAX == INT32_MAX`` on every segment.
+# The ring-buffer rows hold copies of already-clamped window vectors, and
+# the closed-window cursor ``n`` is bounded by the ring height W <= T + 2.
+TEL_CARRY_BOUNDS: Dict[str, CarryBound] = {
+    **SIM_CARRY_BOUNDS,
+    "scalars": CarryBound(
+        "per-window deltas bounded by window period x max issue width "
+        "(one request per serial step); time lanes grow by at most "
+        "simulated time per step and the vector clamps at dram.LAT_SUM_CAP",
+        step=T_MAX),
+    "bank_issues": CarryBound(
+        "one request issued per serial scan step (resets each window, so "
+        "<= TRACE_LEN_BOUND even unwindowed)", step=1),
+    "buf_scalars": CarryBound(
+        "ring rows are copies of the clamped window vector "
+        "<= dram.LAT_SUM_CAP", abs_max=(1 << 30) - 1),
+    "buf_banks": CarryBound(
+        "ring rows are copies of per-window bank issue counts "
+        "<= TRACE_LEN_BOUND", abs_max=TRACE_LEN_BOUND + 1),
+    "n": CarryBound(
+        "closed-window count <= ring height W <= T + 2 <= "
+        "TRACE_LEN_BOUND + 2", abs_max=TRACE_LEN_BOUND + 2),
+}
+
 
 # ---------------------------------------------------------------------------
 # jaxpr plumbing
@@ -593,6 +622,49 @@ def _trace_run_segment(variant: str, channels: int = 0, batch: int = 0):
                                      variant=variant))(tr, p, st)
 
 
+def _tel_carry_names() -> Tuple[str, ...]:
+    """Flat leaf names of the telemetry segment carry: the simulator
+    carry plus the ``dram._TelScan`` extension (derived from an actual
+    pytree so a field rename cannot silently desynchronize the audit)."""
+    from repro.core import dram
+    cur = dram._tel_pack(dram.init_telemetry())
+    scan = dram._TelScan(
+        cur=cur,
+        buf_scalars=jnp.zeros((1,) + cur.scalars.shape, jnp.int32),
+        buf_banks=jnp.zeros((1,) + cur.bank_issues.shape, jnp.int32),
+        n=jnp.int32(0))
+    from repro.core.timing import paper_config
+    static = paper_config("figcache_fast").static
+    return carry_leaf_names((dram.init_state(static),
+                             dram.init_counters(), scan))
+
+
+def _trace_run_segment_tel(channels: int = 0, batch: int = 0,
+                           period: int = 64):
+    """Abstract-trace the telemetry segment step (``dram.run_segment_tel``
+    / ``run_sweep_segment_tel``, DESIGN.md §15).
+
+    Same resume-from-input carry story as ``_trace_run_segment`` — every
+    declared bound is a per-segment invariant — with the ``_TelScan``
+    extension audited against ``TEL_CARRY_BOUNDS``: the packed scalar
+    lane's clamp composes across segments exactly like ``lat_sum_ns``
+    (carried-in cursor <= LAT_SUM_CAP, pre-clamp add <= INT32_MAX)."""
+    from repro.core import dram
+    from repro.core.timing import paper_config
+    static = dataclasses.replace(paper_config("figcache_fast"),
+                                 telemetry=period).static
+    tr = _abstract_trace(256, channels)
+    st = _abstract_sim_state(static, channels, batch)
+    if batch:
+        pb = _abstract_params(batch=batch)
+        return jax.make_jaxpr(
+            lambda t, p, s: dram.sweep_resume_tel(t, static, p,
+                                                  s))(tr, pb, st)
+    p = _abstract_params()
+    return jax.make_jaxpr(
+        lambda t, pp, s: dram.resume_tel(t, static, pp, s))(tr, p, st)
+
+
 def _trace_shard_step(channels: int = 2, batch: int = 4):
     """Abstract-trace the orchestrator's per-segment shard advance
     (``orchestrator.shard_step``: ``dram.sweep_resume`` + the two progress
@@ -655,6 +727,7 @@ def _kernel_entry(which: str):
 
 def default_entries() -> List[Entry]:
     names = _sim_carry_names()
+    tel_names = _tel_carry_names()
     return [
         Entry("dram.run_sweep[fused]",
               lambda: _trace_run_sweep("fused"),
@@ -671,6 +744,12 @@ def default_entries() -> List[Entry]:
         Entry("dram.run_sweep_segment[multi-channel]",
               lambda: _trace_run_segment("fused", channels=2, batch=4),
               carry_names=names, carry_bounds=SIM_CARRY_BOUNDS),
+        Entry("dram.run_segment_tel[fused]",
+              lambda: _trace_run_segment_tel(),
+              carry_names=tel_names, carry_bounds=TEL_CARRY_BOUNDS),
+        Entry("dram.run_sweep_segment_tel[multi-channel]",
+              lambda: _trace_run_segment_tel(channels=2, batch=4),
+              carry_names=tel_names, carry_bounds=TEL_CARRY_BOUNDS),
         Entry("orchestrator.shard_step[sharded]",
               lambda: _trace_shard_step(channels=2, batch=4),
               carry_names=names, carry_bounds=ORCH_CARRY_BOUNDS),

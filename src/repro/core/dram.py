@@ -180,6 +180,175 @@ def init_counters(geom: DRAMGeometry = GEOM) -> Counters:
                     jnp.zeros((geom.n_cores,), jnp.int32), z)
 
 
+class TelemetryWindows(NamedTuple):
+    """In-scan flight-recorder accumulators (DESIGN.md §15).
+
+    Per-window *deltas* of the interesting counters, carried through the
+    scan when ``StaticConfig.telemetry`` (the window period, in REAL
+    requests) is non-zero.  ``win_idx`` is the cursor: the ordinal of the
+    window currently accumulating, where window ``w`` covers real requests
+    ``[w * period, (w + 1) * period)``.  Indexing windows by the
+    real-request count (``cnt.reads + cnt.writes``) rather than by scan
+    position makes the series invariant to chunking and to no-op padding —
+    the same property the counters themselves have.
+
+    All leaves are int32 scalars except ``w_bank_issues`` ``(n_banks,)``.
+    Every count field is bounded by the window period (one real request
+    retires per serial scan step) except ``w_reloc_blocks`` (period x
+    seg_blocks) and the time-like sums ``w_lat_ns``/``w_bus_wait``/
+    ``w_mshr_wait``, which clamp at ``LAT_SUM_CAP`` exactly like
+    ``Counters.lat_sum_ns``.  The bounds are declared to the sanitizer in
+    ``analysis/jaxpr_audit.py`` (``TEL_CARRY_BOUNDS``).
+    """
+    win_idx: jax.Array        # ordinal of the accumulating window
+    w_reqs: jax.Array         # real requests retired this window
+    w_reads: jax.Array
+    w_writes: jax.Array
+    w_row_hits: jax.Array     # row-buffer hits
+    w_cache_hits: jax.Array   # FIGCache hits
+    w_ins: jax.Array          # cache insertions
+    w_reloc_blocks: jax.Array  # blocks relocated into the cache
+    w_lat_ns: jax.Array       # summed request latency (ns, clamped)
+    w_bus_wait: jax.Array     # ticks bursts waited on the busy data bus
+    w_mshr_wait: jax.Array    # ticks requests stalled on a full MSHR
+    w_bank_issues: jax.Array  # (n_banks,) requests issued per bank
+
+
+class TelemetryFrame(NamedTuple):
+    """One segment's closed telemetry windows, oldest first.
+
+    ``win`` leaves carry a leading window axis ``(W, ...)`` with
+    ``W = min(T, T // period + 2) + 1`` — the most windows a T-step
+    segment can close (a closure needs a real request, and the
+    real-request ordinal advances by at most one per serial step) plus
+    the live row the in-scan writer keeps for the accumulating window.
+    The fixed W keeps the scan a single compilation; rows past the
+    closure count hold the live partial / zero filler with
+    ``valid=False`` that hosts MUST mask out (their content is NOT
+    chunk-invariant — the masked series is).  The final, possibly partial
+    window never closes in-scan; it stays in ``SimState.tel`` for the
+    host to collect (``obs.WindowCollector``).
+    """
+    valid: jax.Array          # (W,) bool — row holds a closed window
+    win: TelemetryWindows     # leaves (W, ...), closed-window accumulators
+
+
+def init_telemetry(geom: DRAMGeometry = GEOM) -> TelemetryWindows:
+    z = jnp.int32(0)
+    return TelemetryWindows(z, z, z, z, z, z, z, z, z, z, z,
+                            jnp.zeros((geom.n_banks,), jnp.int32))
+
+
+# the scalar accumulators, in their packed-lane order
+_TEL_SCALARS = tuple(f for f in TelemetryWindows._fields
+                     if f != "w_bank_issues")
+
+
+class TelemetryCarry(NamedTuple):
+    """Packed IN-SCAN form of ``TelemetryWindows`` (DESIGN.md §15).
+
+    The scalar accumulators ride one (11,) int32 vector lane so the scan
+    body pays O(1) tensor ops for the whole window update, not one per
+    metric — measured, this is the difference between a ~1.2x and a
+    ~1.05x telemetry tax.  ``_tel_pack`` / ``_tel_unpack`` convert at
+    segment entry/exit; everything outside the scan (``SimState.tel``,
+    frames, checkpoints, the collector) sees the named
+    ``TelemetryWindows`` form only.
+    """
+    scalars: jax.Array       # (11,) int32 — ``_TEL_SCALARS`` lane order
+    bank_issues: jax.Array   # (n_banks,) int32
+
+
+class _TelScan(NamedTuple):
+    """The full telemetry scan carry: cursor + closed-window ring buffer.
+
+    Closed windows are written INTO the carry (each step writes the
+    post-update accumulators to the live row ``n``; see
+    ``_telemetry_step``) instead of being emitted as per-step scan
+    outputs: a telemetry scan therefore materializes no (T, ...) output
+    slabs at all — only this fixed (W, ...) buffer, sized by
+    ``_scan_segment`` per segment length — which is what keeps the
+    telemetry tax in single digits.  Segment-local: ``SimState`` carries
+    only the unpacked cursor across segments.
+    """
+    cur: TelemetryCarry      # the accumulating window, packed
+    buf_scalars: jax.Array   # (W, 11) int32 — closed windows, oldest first
+    buf_banks: jax.Array     # (W, n_banks) int32
+    n: jax.Array             # () int32 — closed-window count
+
+
+def _tel_pack(tel: TelemetryWindows) -> TelemetryCarry:
+    return TelemetryCarry(
+        scalars=jnp.stack([jnp.asarray(getattr(tel, f), jnp.int32)
+                           for f in _TEL_SCALARS], axis=-1),
+        bank_issues=tel.w_bank_issues)
+
+
+def _tel_unpack(carry: TelemetryCarry) -> TelemetryWindows:
+    lanes = {f: carry.scalars[..., i] for i, f in enumerate(_TEL_SCALARS)}
+    return TelemetryWindows(w_bank_issues=carry.bank_issues, **lanes)
+
+
+def _telemetry_step(tel: _TelScan, period: int, *, real, bank,
+                    is_write, row_hit, hit, n_ins, moved, lat_ns, bus_wait,
+                    mshr_wait, step_id):
+    """Advance the window accumulators by one (possibly no-op) request.
+
+    A request belonging to the next window (``step_id`` at the boundary)
+    first bumps the closed-window count, then resets the accumulators and
+    folds itself into the fresh window.  Every step then writes the
+    POST-update accumulators into the LIVE ring row ``n``: a row is
+    complete the moment a later boundary bumps ``n`` past it, because the
+    last real request of window ``k`` wrote window ``k``'s final values
+    to row ``k`` before the close was detected.  Writing post-update
+    values only — never buffering pre-update state — keeps the whole
+    telemetry carry updatable in place (the pre-update variant forced
+    per-step carry copies and doubled the measured tax).  Because
+    ``step_id`` (the real-request count) advances by at most 1 per serial
+    step, at most one boundary can be crossed per step and ``n`` stays
+    inside the buffer (``_scan_segment`` sizes it with a spare row for
+    the trailing partial).  No-ops are telemetry-inert: ``real`` gates
+    both the boundary test and every delta, so padded replicas of a trace
+    stay bitwise-identical — the counters' own invariant.
+
+    The whole vector lane clamps at ``LAT_SUM_CAP`` like
+    ``Counters.lat_sum_ns``: a no-op for the count lanes (bounded by the
+    window period anyway), the wrap-free saturation bound for the
+    time-sum lanes (cap + per-step bound == INT32_MAX).
+    """
+    vec = tel.cur.scalars
+    # windows never skip (step_id advances by exactly 1 per real request),
+    # so the boundary test is a multiply against the NEXT window's start —
+    # not a per-step integer division
+    w = vec[0] + 1                     # lane 0 == win_idx
+    crossed = real & (step_id >= w * period)
+    n = tel.n + crossed.astype(jnp.int32)
+    z = jnp.int32(0)
+    r32 = real.astype(jnp.int32)
+    # reset lanes on a boundary (win_idx lane resets TO the new ordinal),
+    # then fold this request's deltas in, then saturate
+    reset = jnp.zeros_like(vec).at[0].set(w)
+    delta = jnp.stack([
+        z,                                        # win_idx — set via reset
+        r32,                                      # w_reqs
+        ((~is_write) & real).astype(jnp.int32),   # w_reads
+        (is_write & real).astype(jnp.int32),      # w_writes
+        (row_hit & real).astype(jnp.int32),       # w_row_hits
+        hit.astype(jnp.int32),                    # w_cache_hits
+        n_ins,                                    # w_ins
+        moved,                                    # w_reloc_blocks
+        jnp.where(real, lat_ns, z),               # w_lat_ns
+        jnp.where(real, bus_wait, z),             # w_bus_wait
+        jnp.where(real, mshr_wait, z),            # w_mshr_wait
+    ])
+    vec = jnp.minimum(jnp.where(crossed, reset, vec) + delta, LAT_SUM_CAP)
+    banks = jnp.where(crossed, jnp.zeros_like(tel.cur.bank_issues),
+                      tel.cur.bank_issues).at[bank].add(r32)
+    buf_s = tel.buf_scalars.at[n].set(vec)
+    buf_b = tel.buf_banks.at[n].set(banks)
+    return _TelScan(TelemetryCarry(vec, banks), buf_s, buf_b, n)
+
+
 def _lisa_hops(row: jax.Array, geom: DRAMGeometry) -> jax.Array:
     """Distance (in subarrays) to the nearest interleaved fast subarray.
 
@@ -449,6 +618,13 @@ def make_step(static: StaticConfig, geom: DRAMGeometry = GEOM,
     aggregate reference body (whole-FTS gathers / tree selects / full
     write-backs, no no-op support): bitwise-identical on real requests,
     kept as the equivalence bar and benchmark baseline (DESIGN.md §9).
+
+    The carry is ``(BankState, Counters, tel)``.  With
+    ``static.telemetry`` set, ``tel`` is the window accumulators plus a
+    closed-window ring buffer (``_TelScan``, DESIGN.md §15); when
+    disabled it is ``None`` — an empty pytree subtree, so the scan traces
+    the exact jaxpr it did before telemetry existed.  The dense reference
+    predates telemetry and rejects it.
     """
     if variant == "dense":
         return _make_step_dense(static, geom)
@@ -456,7 +632,7 @@ def make_step(static: StaticConfig, geom: DRAMGeometry = GEOM,
     decide = make_decision_fn(static, geom)
 
     def step(params: MechParams, carry, req):
-        state, cnt = carry
+        state, cnt, tel = carry
         p = params
         bank = req.bank
         core = req.core
@@ -520,7 +696,19 @@ def make_step(static: StaticConfig, geom: DRAMGeometry = GEOM,
             t_end=jnp.maximum(cnt.t_end, jnp.where(
                 real, jnp.maximum(done, serv_end + dec.reloc_cost), 0)),
         )
-        return (state, cnt), None
+
+        # ---- telemetry windows (DESIGN.md §15) -----------------------------
+        # gated on the STATIC knob: disabled builds trace the exact same
+        # jaxpr as before this block existed — bitwise invisibility is
+        # structural, not numerical (tests/test_obs.py golden-pins it)
+        if static.telemetry:
+            tel = _telemetry_step(
+                tel, static.telemetry, real=real, bank=bank,
+                is_write=req.is_write, row_hit=dec.row_hit, hit=dec.hit,
+                n_ins=dec.n_ins, moved=dec.moved, lat_ns=lat_ns,
+                bus_wait=done - (t0 + dec.pre_act + p.cas + p.bl),
+                mshr_wait=t_ready - req.t_issue, step_id=step_id)
+        return (state, cnt, tel), None
 
     return step
 
@@ -531,6 +719,10 @@ def _make_step_dense(static: StaticConfig, geom: DRAMGeometry = GEOM):
     the fused variant on real requests (``tests/test_hotloop.py``); does NOT
     understand ragged no-op padding.  Kept as the equivalence reference and
     the steps/sec baseline of ``benchmarks/sweep_engine.py``."""
+    if static.telemetry:
+        raise ValueError(
+            "telemetry windows require the fused scan body; the dense "
+            "reference predates them (set telemetry=0 or variant='fused')")
     cache_base = jnp.int32(geom.n_rows)           # id-space for cache rows
     reserved_sub = geom.n_subarrays - 1           # figcache_slow region
     lisa = static.mechanism == "lisa_villa"
@@ -538,7 +730,7 @@ def _make_step_dense(static: StaticConfig, geom: DRAMGeometry = GEOM):
     lldram = static.mechanism == "lldram"
 
     def step(params: MechParams, carry, req):
-        state, cnt = carry
+        state, cnt, tel = carry
         p = params
         spr = p.segs_per_row            # traced — rides in MechParams
         bank = req.bank
@@ -672,7 +864,7 @@ def _make_step_dense(static: StaticConfig, geom: DRAMGeometry = GEOM):
             t_end=jnp.maximum(cnt.t_end,
                               jnp.maximum(done, serv_end + reloc_cost)),
         )
-        return (state, cnt), None
+        return (state, cnt, tel), None
 
     return step
 
@@ -695,9 +887,16 @@ class SimState(NamedTuple):
     Leaves gain leading axes in the batched entry points: ``(C, ...)``
     per channel (``sim_init(..., channels=C)``), ``(P, [C,] ...)`` per
     params point (``sim_init(..., batch=P)`` / ``run_sweep_segment``).
+
+    ``tel`` is the telemetry window cursor (DESIGN.md §15): ``None`` —
+    an EMPTY pytree subtree, so the disabled carry has exactly the seed's
+    leaves — unless ``static.telemetry`` is set, in which case threading
+    it across segments is what makes the chunked window series bitwise
+    equal to the monolithic one.
     """
     bank: BankState
     cnt: Counters
+    tel: TelemetryWindows | None = None
 
 
 def sim_init(static: StaticConfig, geom: DRAMGeometry = GEOM,
@@ -709,7 +908,8 @@ def sim_init(static: StaticConfig, geom: DRAMGeometry = GEOM,
     segments), ``batch`` a leading params axis; both compose as
     ``(batch, channels, ...)`` — the axis order the segment entry points
     vmap over."""
-    st = SimState(bank=init_state(static, geom), cnt=init_counters(geom))
+    st = SimState(bank=init_state(static, geom), cnt=init_counters(geom),
+                  tel=init_telemetry(geom) if static.telemetry else None)
     dims = tuple(d for d in (batch, channels) if d is not None)
     if dims:
         st = jax.tree.map(
@@ -722,26 +922,61 @@ def finalize(state: SimState) -> Counters:
     return state.cnt
 
 
-def _scan_segment(step, params: MechParams, trace: Trace,
-                  state: SimState) -> SimState:
+def _scan_segment(step, params: MechParams, trace: Trace, state: SimState,
+                  period: int = 0):
+    if state.tel is None:
+        tel0 = None
+    else:
+        # segment-local closed-window ring buffer (see _TelScan): sized to
+        # the most windows a T-step segment can close, plus a spare row
+        # for the trailing partial that _telemetry_step keeps live.  Row 0
+        # is pre-seeded with the entering partial window so a boundary on
+        # the very first step still closes a complete row.
+        T = trace.t_issue.shape[-1]
+        W = min(T, T // period + 2) + 1
+        cur = _tel_pack(state.tel)
+        tel0 = _TelScan(
+            cur=cur,
+            buf_scalars=jnp.zeros(
+                (W, len(_TEL_SCALARS)), jnp.int32).at[0].set(cur.scalars),
+            buf_banks=jnp.zeros(
+                (W, state.tel.w_bank_issues.shape[-1]),
+                jnp.int32).at[0].set(cur.bank_issues),
+            n=jnp.int32(0))
     carry, _ = jax.lax.scan(functools.partial(step, params),
-                            (state.bank, state.cnt), trace)
-    return SimState(*carry)
+                            (state.bank, state.cnt, tel0), trace)
+    bank, cnt, tel = carry
+    if tel is None:
+        return SimState(bank, cnt, None), None
+    frames = TelemetryFrame(
+        valid=jnp.arange(tel.buf_scalars.shape[0]) < tel.n,
+        win=_tel_unpack(TelemetryCarry(tel.buf_scalars, tel.buf_banks)))
+    return SimState(bank, cnt, _tel_unpack(tel.cur)), frames
 
 
 def _scan_one(step, params: MechParams, trace: Trace,
               static: StaticConfig) -> Counters:
-    carry0 = SimState(init_state(static), init_counters())
-    return _scan_segment(step, params, trace, carry0).cnt
+    carry0 = SimState(init_state(static), init_counters(),
+                      init_telemetry() if static.telemetry else None)
+    return _scan_segment(step, params, trace, carry0,
+                         static.telemetry)[0].cnt
 
 
 def _resume(trace: Trace, static: StaticConfig, params: MechParams,
-            state: SimState, variant: str) -> SimState:
-    """Shared segment core: advance ``state`` over one (T,)/(C, T) chunk."""
+            state: SimState, variant: str):
+    """Shared segment core: advance ``state`` over one (T,)/(C, T) chunk.
+
+    Returns ``(SimState, frames)``; ``frames`` is ``None`` unless
+    ``static.telemetry``, in which case its leaves carry the closed-window
+    axis ``(W, ...)`` (``(C, W, ...)`` for multi-channel chunks), with
+    ``W = min(T, T // period + 2)`` and padding rows ``valid=False``.  The
+    counters-only entry points simply drop the frames: telemetry rides the
+    carry, so consuming or dropping frames never changes the counters."""
     step = make_step(static, variant=variant)
+    per = static.telemetry
     if trace.t_issue.ndim == 1:
-        return _scan_segment(step, params, trace, state)
-    return jax.vmap(lambda tr, st: _scan_segment(step, params, tr, st))(
+        return _scan_segment(step, params, trace, state, per)
+    return jax.vmap(lambda tr, st: _scan_segment(step, params, tr, st, per))(
         trace, state)
 
 
@@ -755,11 +990,27 @@ def resume(trace: Trace, static: StaticConfig, params: MechParams,
     the ``traces`` codec are built for exactly this)."""
     if is_tracer(trace.t_issue):
         _note_trace(f"segment/{static.mechanism}/{variant}")
+    return _resume(trace, static, params, state, variant)[0]
+
+
+def resume_tel(trace: Trace, static: StaticConfig, params: MechParams,
+               state: SimState, variant: str = "fused"):
+    """Telemetry segment: like ``resume`` but returns ``(SimState,
+    TelemetryFrame)`` so the host can collect the segment's closed
+    windows (DESIGN.md §15).  Requires ``static.telemetry > 0``; the
+    jitted form is ``run_segment_tel``."""
+    if static.telemetry <= 0:
+        raise ValueError("resume_tel needs StaticConfig.telemetry > 0 "
+                         "(the window period in real requests)")
+    if is_tracer(trace.t_issue):
+        _note_trace(f"segment_tel/{static.mechanism}/{variant}")
     return _resume(trace, static, params, state, variant)
 
 
 run_segment = jax.jit(resume, static_argnums=(1,),
                       static_argnames=("variant",))
+run_segment_tel = jax.jit(resume_tel, static_argnums=(1,),
+                          static_argnames=("variant",))
 
 
 def simulate(trace: Trace, static: StaticConfig, params: MechParams,
@@ -775,7 +1026,7 @@ def simulate(trace: Trace, static: StaticConfig, params: MechParams,
         _note_trace(f"simulate/{static.mechanism}/{variant}")
     C = trace.t_issue.shape[0] if trace.t_issue.ndim == 2 else None
     state = sim_init(static, channels=C)
-    return finalize(_resume(trace, static, params, state, variant))
+    return finalize(_resume(trace, static, params, state, variant)[0])
 
 
 _simulate_jit = jax.jit(simulate, static_argnums=(1,),
@@ -784,15 +1035,17 @@ _simulate_jit = jax.jit(simulate, static_argnums=(1,),
 
 def _sweep_resume(trace: Trace, static: StaticConfig,
                   params_batch: MechParams, state: SimState,
-                  variant: str) -> SimState:
+                  variant: str):
     """Shared batched-segment core: params leaves (P,), state leaves
-    (P, ...) or (P, C, ...)."""
+    (P, ...) or (P, C, ...).  Returns ``(SimState, frames)`` with frame
+    leaves ``(P, [C,] W, ...)`` when telemetry is on, else ``None``."""
     step = make_step(static, variant=variant)
+    per = static.telemetry
     if trace.t_issue.ndim == 1:
-        one = lambda p, st: _scan_segment(step, p, trace, st)
+        one = lambda p, st: _scan_segment(step, p, trace, st, per)
     else:
         one = lambda p, st: jax.vmap(
-            lambda tr, s: _scan_segment(step, p, tr, s))(trace, st)
+            lambda tr, s: _scan_segment(step, p, tr, s, per))(trace, st)
     return jax.vmap(one)(params_batch, state)
 
 
@@ -804,11 +1057,27 @@ def sweep_resume(trace: Trace, static: StaticConfig,
     The jitted form is ``run_sweep_segment``."""
     if is_tracer(trace.t_issue):
         _note_trace(f"sweep_segment/{static.mechanism}/{variant}")
+    return _sweep_resume(trace, static, params_batch, state, variant)[0]
+
+
+def sweep_resume_tel(trace: Trace, static: StaticConfig,
+                     params_batch: MechParams, state: SimState,
+                     variant: str = "fused"):
+    """Telemetry batched segment: ``sweep_resume`` returning the frames
+    too — the whole capacity grid's window series in one compiled scan
+    (DESIGN.md §15).  The jitted form is ``run_sweep_segment_tel``."""
+    if static.telemetry <= 0:
+        raise ValueError("sweep_resume_tel needs StaticConfig.telemetry > 0 "
+                         "(the window period in real requests)")
+    if is_tracer(trace.t_issue):
+        _note_trace(f"sweep_segment_tel/{static.mechanism}/{variant}")
     return _sweep_resume(trace, static, params_batch, state, variant)
 
 
 run_sweep_segment = jax.jit(sweep_resume, static_argnums=(1,),
                             static_argnames=("variant",))
+run_sweep_segment_tel = jax.jit(sweep_resume_tel, static_argnums=(1,),
+                                static_argnames=("variant",))
 
 
 @functools.partial(jax.jit, static_argnums=(1,), static_argnames=("variant",))
@@ -825,7 +1094,7 @@ def run_sweep(trace: Trace, static: StaticConfig,
     P = jax.tree.leaves(params_batch)[0].shape[0]
     state = sim_init(static, channels=C, batch=P)
     return finalize(_sweep_resume(trace, static, params_batch, state,
-                                  variant))
+                                  variant)[0])
 
 
 def run_channel(trace: Trace, cfg: MechConfig,

@@ -396,6 +396,11 @@ def _scan_waves(step, params: MechParams, wtrace: dram.Trace,
 def _resume_waves(wtrace: dram.Trace, static: StaticConfig,
                   params: MechParams, state: dram.SimState
                   ) -> dram.SimState:
+    if static.telemetry:
+        # the wave scan carries (bank, cnt) only — it would silently drop
+        # the telemetry cursor (DESIGN.md §15); refuse rather than lie
+        raise ValueError("telemetry windows are not supported under "
+                         "wavefront execution (set telemetry=0)")
     step = make_wave_step(static)
     if wtrace.t_issue.ndim == 2:
         return _scan_waves_segment(step, params, wtrace, state)

@@ -178,13 +178,27 @@ def _wave_bucket(n: int) -> int:
     return b
 
 
+def _check_telemetry(telemetry, static, wavefront_exec=False):
+    """Validate a telemetry collector against the run's static config."""
+    if telemetry is None:
+        return
+    if not static.telemetry:
+        raise ValueError(
+            "a telemetry collector needs a telemetry-enabled config "
+            "(set MechConfig.telemetry to the window period)")
+    if wavefront_exec:
+        raise ValueError("telemetry windows are not supported under "
+                         "wavefront execution")
+
+
 def simulate_stream(segments: Iterable[dram.Trace], cfg: MechConfig,
                     t: DRAMTimings = DDR4, *, variant: str = "fused",
                     wavefront_exec: bool = False,
                     state: Optional[dram.SimState] = None,
                     start_chunk: int = 0,
                     checkpoint_dir: Optional[str] = None,
-                    checkpoint_every: int = 0) -> dram.Counters:
+                    checkpoint_every: int = 0,
+                    telemetry=None) -> dram.Counters:
     """Replay a segment stream under one config; returns final counters.
 
     Bitwise-equal to the monolithic ``dram.run_channel(s)`` on the
@@ -193,9 +207,17 @@ def simulate_stream(segments: Iterable[dram.Trace], cfg: MechConfig,
     per-chunk waves and drives ``wavefront.run_segment_waves`` instead of
     the serial segment scan.  ``state``/``start_chunk`` resume a
     checkpointed replay (see ``resume_stream``); ``checkpoint_dir`` +
-    ``checkpoint_every`` snapshot the carry every N segments."""
+    ``checkpoint_every`` snapshot the carry every N segments.
+
+    ``telemetry`` is a window-frame collector (``obs.WindowCollector`` —
+    anything with ``add(frames)``/``close(state)``) and requires
+    ``cfg.telemetry > 0``: segments then run through ``run_segment_tel``
+    and each segment's frames are handed to the collector; because the
+    cursor rides in ``SimState.tel``, the collected series is chunking-
+    invariant (DESIGN.md §15)."""
     params = cfg.params(t)
     static = cfg.static
+    _check_telemetry(telemetry, static, wavefront_exec)
     it: Iterable[dram.Trace] = segments
     if cfg.sched is not None and not cfg.sched.is_identity:
         it = scheduled_segments(it, cfg.sched)
@@ -211,6 +233,10 @@ def simulate_stream(segments: Iterable[dram.Trace], cfg: MechConfig,
             w = wavefront.pad_waves(
                 w, _wave_bucket(np.asarray(w.t_issue).shape[-2]))
             state = wavefront.run_segment_waves(w, static, params, state)
+        elif telemetry is not None:
+            state, frames = dram.run_segment_tel(seg, static, params, state,
+                                                 variant=variant)
+            telemetry.add(frames)
         else:
             state = dram.run_segment(seg, static, params, state,
                                      variant=variant)
@@ -218,6 +244,8 @@ def simulate_stream(segments: Iterable[dram.Trace], cfg: MechConfig,
                 (i + 1) % checkpoint_every == 0:
             ckpt_lib.save_sim_state(checkpoint_dir, i + 1, state)
     assert state is not None, "empty segment stream"
+    if telemetry is not None:
+        telemetry.close(state)
     return dram.finalize(state)
 
 
@@ -248,7 +276,8 @@ def sweep_stream(segments: Iterable[dram.Trace],
                  state: Optional[dram.SimState] = None,
                  start_chunk: int = 0,
                  checkpoint_dir: Optional[str] = None,
-                 checkpoint_every: int = 0) -> dram.Counters:
+                 checkpoint_every: int = 0,
+                 telemetry=None) -> dram.Counters:
     """Batched streamed replay: ``dram.run_sweep``'s semantics over a
     segment stream (params leaves (P,)), one compiled step for all
     segments.  Callers pre-schedule or stream identity-order traces —
@@ -257,7 +286,11 @@ def sweep_stream(segments: Iterable[dram.Trace],
     ``state``/``start_chunk``/``checkpoint_dir``/``checkpoint_every``
     mirror ``simulate_stream``: the batched carry checkpoints through the
     same substrate, so a killed sweep resumes mid-trace (the orchestrator,
-    DESIGN.md §14, layers shard-level durability on top of this)."""
+    DESIGN.md §14, layers shard-level durability on top of this).
+    ``telemetry`` collects the whole grid's window frames (leaves gain the
+    (P, [C,]) lead axes) via ``run_sweep_segment_tel`` — see
+    ``simulate_stream``."""
+    _check_telemetry(telemetry, static)
     P = jax.tree.leaves(params_batch)[0].shape[0]
     for i, seg in enumerate(segments):
         if i < start_chunk:
@@ -266,10 +299,17 @@ def sweep_stream(segments: Iterable[dram.Trace],
             sh = np.asarray(seg.t_issue).shape
             state = dram.sim_init(static, batch=P,
                                   channels=sh[0] if len(sh) == 2 else None)
-        state = dram.run_sweep_segment(seg, static, params_batch, state,
-                                       variant=variant)
+        if telemetry is not None:
+            state, frames = dram.run_sweep_segment_tel(
+                seg, static, params_batch, state, variant=variant)
+            telemetry.add(frames)
+        else:
+            state = dram.run_sweep_segment(seg, static, params_batch, state,
+                                           variant=variant)
         if checkpoint_dir and checkpoint_every and \
                 (i + 1) % checkpoint_every == 0:
             ckpt_lib.save_sim_state(checkpoint_dir, i + 1, state)
     assert state is not None, "empty segment stream"
+    if telemetry is not None:
+        telemetry.close(state)
     return dram.finalize(state)

@@ -214,6 +214,12 @@ class StaticConfig:
     # ``kernels/fts_lookup`` op (DESIGN.md §9); a trace-time branch, so it
     # lives in the static half.  Off-TPU it falls back to the pure-JAX ref.
     fts_kernel: bool = False
+    # in-scan telemetry window period in REAL requests (DESIGN.md §15);
+    # 0 disables.  Static because enabling it extends the scan carry with
+    # the ``dram.TelemetryWindows`` accumulators and adds per-step frame
+    # outputs — a different program structure.  Disabled (the default) is
+    # bitwise-identical to the pre-telemetry scan.
+    telemetry: int = 0
 
     @property
     def has_cache(self) -> bool:
@@ -265,6 +271,8 @@ class MechConfig:
     insert_threshold: int = 1      # consecutive misses before insertion
     benefit_bits: int = 5
     fts_kernel: bool = False       # fuse lookup+victim via kernels/fts_lookup
+    telemetry: int = 0             # in-scan window period in real requests;
+                                   # 0 = off (DESIGN.md §15)
     # which memory controller serves the trace (DESIGN.md §10): a host-side
     # trace-preprocessing knob — it never enters the compiled scan, so any
     # sched grid shares the scan compilations of its mech/policy grid
@@ -304,7 +312,7 @@ class MechConfig:
         shapes must share one structure via ``shared_static``."""
         if not self.has_cache:
             return StaticConfig(self.mechanism, 1, 1, self.policy,
-                                self.fts_kernel)
+                                self.fts_kernel, self.telemetry)
         return StaticConfig(
             mechanism=self.mechanism,
             max_slots=_pad_bucket(self.n_slots, SMALL_MAX_SLOTS),
@@ -312,6 +320,7 @@ class MechConfig:
                                          SMALL_MAX_SEGS_PER_ROW),
             policy=self.policy,
             fts_kernel=self.fts_kernel,
+            telemetry=self.telemetry,
         )
 
     @property
@@ -324,6 +333,7 @@ class MechConfig:
             max_segs_per_row=self.segs_per_row if self.has_cache else 1,
             policy=self.policy,
             fts_kernel=self.fts_kernel,
+            telemetry=self.telemetry,
         )
 
     def params(self, t: DRAMTimings = DDR4) -> MechParams:
@@ -344,7 +354,8 @@ def static_group_key(cfg: MechConfig):
     """The non-shape half of a static structure.  Configs sharing this key
     can always share ONE compiled scan via ``shared_static`` — capacity and
     segment-size variation never splits a group."""
-    return (cfg.mechanism, cfg.policy, cfg.fts_kernel, cfg.has_cache)
+    return (cfg.mechanism, cfg.policy, cfg.fts_kernel, cfg.has_cache,
+            cfg.telemetry)
 
 
 def shared_static(cfgs) -> StaticConfig:
@@ -358,7 +369,8 @@ def shared_static(cfgs) -> StaticConfig:
         "a shared static needs one mechanism/policy/fts_kernel"
     c0 = cfgs[0]
     if not c0.has_cache:
-        return StaticConfig(c0.mechanism, 1, 1, c0.policy, c0.fts_kernel)
+        return StaticConfig(c0.mechanism, 1, 1, c0.policy, c0.fts_kernel,
+                            c0.telemetry)
     return StaticConfig(
         mechanism=c0.mechanism,
         max_slots=_pad_bucket(max(c.n_slots for c in cfgs),
@@ -367,6 +379,7 @@ def shared_static(cfgs) -> StaticConfig:
                                      SMALL_MAX_SEGS_PER_ROW),
         policy=c0.policy,
         fts_kernel=c0.fts_kernel,
+        telemetry=c0.telemetry,
     )
 
 

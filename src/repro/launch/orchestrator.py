@@ -38,7 +38,11 @@ completion under faults:
   under a fresh worker id (``HeartbeatMonitor`` EMA deadline), and
   graceful degradation: a config whose counters come back negative,
   non-finite, or saturated is **quarantined** with a diagnostic record in
-  the manifest while the rest of the grid completes.
+  the manifest while the rest of the grid completes.  Every recovery
+  decision leaves a durable per-attempt record in the shard's manifest
+  ``events`` list AND an ``obs.Tracer`` span/event (timestamped off the
+  same logical clock, so seeded runs log byte-identically; see
+  DESIGN.md §15 and the ``--trace`` CLI flag).
 
 Resume-equivalence argument (the §14 guarantee): shard counters are a pure
 function of (scheduled trace, params) — the scheduler permutation is
@@ -69,6 +73,7 @@ from repro.core.timing import (DDR4, DRAMTimings, MechConfig, SchedConfig,
                                paper_config, shared_static)
 from repro.core.workload import content_hash
 from repro.launch.mesh import make_sweep_mesh
+from repro.obs.trace import Tracer, chrome_from_jsonl
 from repro.runtime.fault_tolerance import HeartbeatMonitor
 from repro.runtime.faults import (FaultPlan, InjectedDeviceLoss,
                                   InjectedTransient)
@@ -161,10 +166,15 @@ def make_plan(specs: Sequence["workload.WorkloadSpec"],
 
 
 def _fresh_entry(shard: Shard, plan: SweepPlan) -> dict:
+    # "events" is the shard's durable diagnostic trail: one record per
+    # straggler re-issue / transient retry / device loss, committed to the
+    # manifest as it happens so a postmortem after ANY sequence of kills
+    # still sees every recovery decision (the span log is the live twin)
     return {"workload": plan.specs[shard.w].content_hash()[:16],
             "cfg_idxs": list(shard.cfg_idxs), "status": "pending",
             "worker": None, "attempts": 0, "reissues": 0,
-            "segments_done": 0, "quarantined_cfgs": {}, "diag": None}
+            "segments_done": 0, "quarantined_cfgs": {}, "diag": None,
+            "events": []}
 
 
 def write_manifest(path: str, manifest: dict):
@@ -192,7 +202,8 @@ class Orchestrator:
                  max_reissues: int = 2, backoff_s: float = 0.05,
                  fault_plan: Optional[FaultPlan] = None,
                  monitor: Optional[HeartbeatMonitor] = None,
-                 nominal_step_s: float = 1.0):
+                 nominal_step_s: float = 1.0,
+                 tracer: Optional[Tracer] = None):
         self.plan = plan
         self.run_dir = run_dir
         self.t = t
@@ -203,6 +214,11 @@ class Orchestrator:
         self.backoff_s = backoff_s
         self.faults = fault_plan if fault_plan is not None else FaultPlan()
         self.nominal_step_s = nominal_step_s
+        # span-traced orchestration (DESIGN.md §15): timestamps come from
+        # the fault plan's LogicalClock, so a seeded run writes a
+        # byte-identical span log every time
+        self.tracer = tracer if tracer is not None else Tracer(
+            clock=self.faults.clock.now)
         self.monitor = monitor if monitor is not None else HeartbeatMonitor(
             [s.key for s in plan.shards], now=self.faults.clock.now)
         self._lost_devices = 0
@@ -263,6 +279,14 @@ class Orchestrator:
         e.update(fields)
         write_manifest(self.manifest_path, self.manifest)
 
+    def _record_event(self, e: dict, rec: dict):
+        """Append one durable per-attempt diagnostic record to the shard's
+        manifest entry and commit it immediately — recovery decisions must
+        survive a kill that lands right after them.  ``setdefault`` keeps
+        manifests written before the "events" field readable."""
+        e.setdefault("events", []).append(rec)
+        write_manifest(self.manifest_path, self.manifest)
+
     # -- shard execution --------------------------------------------------
     def _shard_inputs(self, shard: Shard):
         """Regenerate the shard's (scheduled trace, static, params batch).
@@ -316,7 +340,9 @@ class Orchestrator:
             prog, step, _ = ckpt_lib.restore_latest(
                 self._ckpt_dir(key), like, kind="shard_prog")
         except ckpt_lib.CheckpointError:
+            self.tracer.event("checkpoint.fresh", shard=key)
             return init_progress(static, P, C), 0
+        self.tracer.event("checkpoint.restore", shard=key, segment=step)
         return ShardProgress(*prog), step
 
     def _execute_shard(self, shard_idx: int, shard: Shard, worker: str):
@@ -348,10 +374,16 @@ class Orchestrator:
                     raise _StragglerReissue(worker)
             if self.checkpoint_every and \
                     (i + 1) % self.checkpoint_every == 0 and (i + 1) < n_seg:
-                ckpt_lib.save_checkpoint(self._ckpt_dir(shard.key), i + 1,
-                                         prog, {"kind": "shard_prog"})
-                self.faults.after_checkpoint(shard_idx, i,
-                                             self._ckpt_dir(shard.key))
+                # a span, not an instant: injected kills fire right after
+                # the commit (after_checkpoint), so a log ending inside an
+                # open checkpoint.save span pinpoints the death site
+                with self.tracer.span("checkpoint.save", shard=shard.key,
+                                      segment=i + 1):
+                    ckpt_lib.save_checkpoint(self._ckpt_dir(shard.key),
+                                             i + 1, prog,
+                                             {"kind": "shard_prog"})
+                    self.faults.after_checkpoint(shard_idx, i,
+                                                 self._ckpt_dir(shard.key))
                 e["segments_done"] = i + 1
                 write_manifest(self.manifest_path, self.manifest)
         cnts = jax.tree.map(lambda a: np.array(jax.device_get(a)),
@@ -390,11 +422,13 @@ class Orchestrator:
         """Drive every non-done shard to done/quarantined.  Injected kills
         (``InjectedKill``/SIGKILL) escape — re-instantiate and ``run()``
         again to resume; everything retryable is absorbed here."""
-        for idx, shard in enumerate(self.plan.shards):
-            e = self.manifest["shards"][shard.key]
-            if e["status"] in ("done", "quarantined"):
-                continue
-            self._run_shard(idx, shard)
+        with self.tracer.span("run", grid=self.plan.grid_hash,
+                              shards=len(self.plan.shards)):
+            for idx, shard in enumerate(self.plan.shards):
+                e = self.manifest["shards"][shard.key]
+                if e["status"] in ("done", "quarantined"):
+                    continue
+                self._run_shard(idx, shard)
         return self.status()
 
     def _run_shard(self, idx: int, shard: Shard):
@@ -404,32 +438,72 @@ class Orchestrator:
         while True:
             self._set_status(shard.key, "running", worker=worker,
                              attempts=e["attempts"] + 1)
+            # one span per ATTEMPT: an attempt that dies (kill) leaves its
+            # span open in the log — that IS the death marker; every other
+            # outcome closes it with an explicit verdict
+            self.tracer.begin("shard", key=shard.key, worker=worker,
+                              attempt=e["attempts"])
             try:
                 quarantined = self._execute_shard(idx, shard, worker)
+                for pos in sorted(quarantined):
+                    self.tracer.event("quarantine", key=shard.key,
+                                      cfg_pos=int(pos),
+                                      diag=quarantined[pos])
                 self._set_status(shard.key, "done",
                                  quarantined_cfgs=quarantined)
+                self.tracer.end("shard", outcome="done")
                 return
             except _StragglerReissue:
                 # re-issue under a fresh logical worker; the checkpointed
                 # prefix is reused, so the slow attempt costs only its tail
                 e["reissues"] += 1
-                worker = f"{shard.key}#r{e['reissues']}"
+                new_worker = f"{shard.key}#r{e['reissues']}"
+                self._record_event(e, {
+                    "kind": "straggler_reissue", "worker": worker,
+                    "new_worker": new_worker, "attempt": e["attempts"],
+                    "reissue": e["reissues"]})
+                self.tracer.event("straggler_reissue", key=shard.key,
+                                  worker=worker, new_worker=new_worker,
+                                  reissue=e["reissues"])
+                self.tracer.end("shard", outcome="reissued")
+                worker = new_worker
                 self.monitor.add_worker(worker)
-                write_manifest(self.manifest_path, self.manifest)
                 continue
             except InjectedDeviceLoss:
                 # shrink the device pool and replay from the checkpoint —
                 # placement-only sharding makes the re-run bitwise equal
                 self._lost_devices += 1
+                self._record_event(e, {
+                    "kind": "device_loss", "worker": worker,
+                    "attempt": e["attempts"],
+                    "devices_lost": self._lost_devices})
+                self.tracer.event("device_loss", key=shard.key,
+                                  devices_lost=self._lost_devices)
+                self.tracer.end("shard", outcome="device_loss")
                 continue
             except InjectedTransient as exc:
                 attempt += 1
                 if attempt > self.max_retries:
+                    self._record_event(e, {
+                        "kind": "retries_exhausted", "worker": worker,
+                        "attempt": attempt})
+                    self.tracer.event("quarantine", key=shard.key,
+                                      diag=f"retries exhausted: {exc}")
+                    self.tracer.end("shard", outcome="quarantined")
                     self._set_status(shard.key, "quarantined",
                                      diag=f"retries exhausted: {exc}")
                     return
-                if self.backoff_s:
-                    self.faults.clock.sleep(self.backoff_s * 2 ** (attempt - 1))
+                backoff = (self.backoff_s * 2 ** (attempt - 1)
+                           if self.backoff_s else 0.0)
+                self._record_event(e, {
+                    "kind": "transient_retry", "worker": worker,
+                    "attempt": attempt, "backoff_s": backoff})
+                self.tracer.event("transient_retry", key=shard.key,
+                                  worker=worker, attempt=attempt,
+                                  backoff_s=backoff)
+                self.tracer.end("shard", outcome="retry")
+                if backoff:
+                    self.faults.clock.sleep(backoff)
                 continue
 
     # -- results ----------------------------------------------------------
@@ -559,6 +633,10 @@ def main(argv=None) -> int:
                       help="inject a kill at shard index SHARD, segment SEG")
     runp.add_argument("--kill-mode", choices=("raise", "sigkill"),
                       default="sigkill")
+    runp.add_argument("--trace", default=None, metavar="PATH",
+                      help="append the span/event log (JSONL) here; a "
+                           "successful run also writes PATH's .chrome.json "
+                           "Perfetto export")
     cmpp = sub.add_parser("compare", help="check run results against the "
                           "uninterrupted sweep_traces oracle, bitwise")
     cmpp.add_argument("--run-dir", required=True)
@@ -573,10 +651,18 @@ def main(argv=None) -> int:
             s, k = (int(x) for x in args.kill.split(":"))
             fault_plan = FaultPlan([FaultEvent(
                 kind="kill", shard=s, segment=k, mode=args.kill_mode)])
+        tracer = None
+        if args.trace:
+            tracer = Tracer(args.trace, clock=fault_plan.clock.now)
         orch = Orchestrator(plan, args.run_dir, fault_plan=fault_plan,
-                            backoff_s=0.0)
+                            backoff_s=0.0, tracer=tracer)
         counts = orch.run()
         print(f"shards: {counts}")
+        if args.trace:
+            tracer.close()
+            dst = os.path.splitext(args.trace)[0] + ".chrome.json"
+            n = chrome_from_jsonl(args.trace, dst)
+            print(f"trace: {args.trace} -> {dst} ({n} events)")
         return 0
     # compare
     orch = Orchestrator(plan, args.run_dir)

@@ -1,0 +1,101 @@
+"""Profiling hooks: compile-vs-execute timing + dispatch counts.
+
+The registered compile contracts (``analysis.contracts.REGISTRY``) are
+the repo's authoritative list of compiled entry points and their
+representative workloads, so they double as the profiling corpus: each
+contract body runs twice — the first (cold) run pays tracing+XLA
+compilation for whatever its entry points need, the second (warm) run
+hits the jit cache — and the difference estimates compile wall time.
+``count_dispatches`` instruments the jitted module-level entry points so
+the same runs also report how many dispatches each entry point absorbed
+(a contract that claims "one compiled scan" should show many dispatches
+into ONE entry point, not one dispatch into many).
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Dict, Iterable, Optional
+
+__all__ = ["count_dispatches", "profile_contracts"]
+
+# module-level jitted entry points worth counting: (module path, attr)
+_ENTRY_POINTS = (
+    ("repro.core.dram", "run_segment"),
+    ("repro.core.dram", "run_segment_tel"),
+    ("repro.core.dram", "run_sweep_segment"),
+    ("repro.core.dram", "run_sweep_segment_tel"),
+    ("repro.core.dram", "run_sweep"),
+    ("repro.core.dram", "_simulate_jit"),
+    ("repro.core.sched.wavefront", "run_segment_waves"),
+    ("repro.launch.orchestrator", "shard_segment"),
+    ("repro.launch.orchestrator", "shard_step"),
+)
+
+
+@contextlib.contextmanager
+def count_dispatches(entry_points=_ENTRY_POINTS):
+    """Count calls into the jitted module-level entry points.
+
+    Wraps each entry point with a counting shim for the duration of the
+    context and yields the live ``{name: count}`` dict.  Works because
+    every caller in the repo resolves these through their module
+    attribute at call time (``dram.run_segment(...)``), never through a
+    captured local."""
+    import importlib
+
+    counts: Dict[str, int] = {}
+    saved = []
+    for mod_name, attr in entry_points:
+        mod = importlib.import_module(mod_name)
+        fn = getattr(mod, attr)
+        name = f"{mod_name.rsplit('.', 1)[-1]}.{attr.lstrip('_')}"
+        counts[name] = 0
+
+        def shim(*a, __fn=fn, __name=name, **kw):
+            counts[__name] += 1
+            return __fn(*a, **kw)
+
+        saved.append((mod, attr, fn))
+        setattr(mod, attr, shim)
+    try:
+        yield counts
+    finally:
+        for mod, attr, fn in saved:
+            setattr(mod, attr, fn)
+
+
+def profile_contracts(names: Optional[Iterable[str]] = None
+                      ) -> Dict[str, dict]:
+    """Cold/warm-profile registered compile contracts.
+
+    Per contract: wall seconds of the cold run (trace + compile +
+    execute) and the warm run (execute only), the compile estimate
+    (their difference, floored at 0 — both runs share one process), the
+    fresh-compilation counts each run logged, and the per-entry-point
+    dispatch counts of the warm run."""
+    from repro.analysis import contracts
+
+    reg = contracts.REGISTRY
+    names = list(names) if names is not None else sorted(reg)
+    out: Dict[str, dict] = {}
+    for name in names:
+        c = reg[name]
+        t0 = time.perf_counter()
+        jits_cold = c.run()
+        cold_s = time.perf_counter() - t0
+        with count_dispatches() as dispatches:
+            t0 = time.perf_counter()
+            jits_warm = c.run()
+            warm_s = time.perf_counter() - t0
+        out[name] = {
+            "cold_s": round(cold_s, 4),
+            "warm_s": round(warm_s, 4),
+            "compile_s_est": round(max(0.0, cold_s - warm_s), 4),
+            "jits_cold": jits_cold,
+            "jits_warm": jits_warm,
+            "max_jits": c.max_jits,
+            "dispatches_warm": {k: v for k, v in sorted(dispatches.items())
+                                if v},
+        }
+    return out

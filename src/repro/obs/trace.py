@@ -1,0 +1,132 @@
+"""Structured span/event log for the orchestration layer (DESIGN.md §15).
+
+A flat JSONL stream of Chrome-trace-shaped records: ``ph="B"``/``"E"``
+bracket a span, ``ph="i"`` is an instant event.  Timestamps come from an
+injected clock — the orchestrator passes its ``runtime.faults.
+LogicalClock`` — so a run under a seeded ``FaultPlan`` produces a
+byte-identical log every time (``tests/test_obs.py`` pins this); no wall
+clock ever enters a record.  Records are appended and flushed one write
+per event, so a SIGKILLed orchestrator still leaves every span it opened
+on disk (the CI ``kill-and-resume`` job uploads exactly that file).
+
+``chrome_trace`` / ``chrome_from_jsonl`` re-shape the log into the Chrome
+trace-event JSON format (a ``{"traceEvents": [...]}`` object) loadable in
+Perfetto or chrome://tracing.
+"""
+from __future__ import annotations
+
+import contextlib
+import itertools
+import json
+import os
+from typing import Any, Callable, Dict, List, Optional
+
+__all__ = ["Tracer", "chrome_trace", "chrome_from_jsonl", "read_jsonl"]
+
+
+def _encode(rec: Dict[str, Any]) -> str:
+    # sorted keys + no whitespace variance == byte-determinism
+    return json.dumps(rec, sort_keys=True, separators=(",", ":"))
+
+
+class Tracer:
+    """Append-only span/event recorder.
+
+    ``clock`` is any zero-arg callable yielding monotonically
+    non-decreasing numbers; the orchestrator passes
+    ``FaultPlan.clock.now`` so trace time is the same deterministic
+    logical time its heartbeats and backoffs run on.  Without a clock a
+    plain event counter is used (still deterministic, just unitless).
+    ``path=None`` keeps records in memory only (``.events``).
+    """
+
+    def __init__(self, path: Optional[str] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 pid: int = 0) -> None:
+        self.events: List[Dict[str, Any]] = []
+        self.pid = pid
+        self._clock = clock or (lambda c=itertools.count(1): float(next(c)))
+        if path and os.path.dirname(path):
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+        self._f = open(path, "a", encoding="utf-8") if path else None
+
+    def _emit(self, ph: str, name: str, attrs: Dict[str, Any]) -> None:
+        rec = {"name": name, "ph": ph, "ts": self._clock(),
+               "pid": self.pid, "tid": 0, "args": attrs}
+        self.events.append(rec)
+        if self._f is not None:
+            self._f.write(_encode(rec) + "\n")
+            self._f.flush()  # survive SIGKILL mid-shard
+
+    def event(self, name: str, **attrs: Any) -> None:
+        """One instant event (retry, straggler re-issue, quarantine...)."""
+        self._emit("i", name, attrs)
+
+    def begin(self, name: str, **attrs: Any) -> None:
+        self._emit("B", name, attrs)
+
+    def end(self, name: str, **attrs: Any) -> None:
+        self._emit("E", name, attrs)
+
+    @contextlib.contextmanager
+    def span(self, name: str, **attrs: Any):
+        """Bracket a scope with B/E records.  The E record is emitted on
+        the success path only — a span left open in the log IS the signal
+        that the process died (or raised) inside it."""
+        self.begin(name, **attrs)
+        yield self
+        self.end(name)
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+
+def read_jsonl(path: str) -> List[Dict[str, Any]]:
+    out = []
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+def chrome_trace(events: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Re-shape recorded events into the Chrome trace-event format.
+
+    Spans the process never closed (it died inside them) get a synthetic
+    ``E`` at the last seen timestamp so viewers render them instead of
+    dropping them.  Instant events gain the required thread scope.
+    """
+    out: List[Dict[str, Any]] = []
+    open_stack: List[Dict[str, Any]] = []
+    last_ts = 0.0
+    for e in events:
+        rec = {"name": e["name"], "ph": e["ph"], "ts": float(e["ts"]),
+               "pid": int(e.get("pid", 0)), "tid": int(e.get("tid", 0)),
+               "args": e.get("args", {})}
+        last_ts = max(last_ts, rec["ts"])
+        if rec["ph"] == "i":
+            rec["s"] = "t"  # thread-scoped instant
+        elif rec["ph"] == "B":
+            open_stack.append(rec)
+        elif rec["ph"] == "E" and open_stack:
+            open_stack.pop()
+        out.append(rec)
+    for rec in reversed(open_stack):   # LIFO: close inner spans first
+        out.append({"name": rec["name"], "ph": "E", "ts": last_ts,
+                    "pid": rec["pid"], "tid": rec["tid"],
+                    "args": {"synthetic_close": True}})
+    return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+
+def chrome_from_jsonl(src: str, dst: str) -> int:
+    """Convert a span JSONL file to a Perfetto-loadable trace file.
+
+    Returns the number of trace events written."""
+    doc = chrome_trace(read_jsonl(src))
+    with open(dst, "w", encoding="utf-8") as f:
+        json.dump(doc, f, sort_keys=True, separators=(",", ":"))
+    return len(doc["traceEvents"])

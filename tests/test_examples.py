@@ -37,6 +37,15 @@ def test_quickstart_scenario_smoke(monkeypatch, capsys):
     assert "[3] qwen2-7b" in out
 
 
+def test_quickstart_telemetry_smoke(monkeypatch, capsys):
+    """``--telemetry`` streams a window-collected FIGCache run and prints
+    the compact per-window hit-rate table (DESIGN.md §15)."""
+    out = _run("quickstart.py", monkeypatch, capsys, argv=["--telemetry"])
+    assert "[1] mcf speedup" in out
+    assert "[1t] per-window telemetry" in out
+    assert "hit%" in out and "rowhit%" in out
+
+
 def test_dram_cache_demo_smoke(monkeypatch, capsys):
     out = _run("dram_cache_demo.py", monkeypatch, capsys)
     assert "FIGARO timing" in out

@@ -133,8 +133,9 @@ def _mini_trace(n, bank_of, row_of, col_of, core_of=lambda i: 0,
 def _final_state(trace, cfg: MechConfig) -> dram.BankState:
     static = cfg.static
     step = dram.make_step(static)
-    carry0 = (dram.init_state(static), dram.init_counters())
-    (state, _), _ = jax.lax.scan(
+    # telemetry lane is None when static.telemetry == 0 (DESIGN.md §15)
+    carry0 = (dram.init_state(static), dram.init_counters(), None)
+    (state, _, _), _ = jax.lax.scan(
         functools.partial(step, cfg.params()), carry0, trace)
     return state
 
