@@ -1,0 +1,154 @@
+"""Bench-trajectory regression gate: diff fresh BENCH_*.json vs baselines.
+
+``benchmarks/baselines/`` commits one ``BENCH_*.json`` per perf
+subsystem (hot loop, wavefront, tracegen, streaming, shard sweep, obs
+telemetry), all produced in ``--quick`` mode so a CI runner's fresh
+numbers are comparable.  This module reads the fresh files a CI run
+just wrote into the repo root (which ``.gitignore`` keeps out of the
+tree) and checks each REGISTRY metric against the committed baseline
+with an explicit per-metric tolerance band — a silent perf or jit-count
+regression fails the job instead of merely drifting the artifact.
+
+Metric kinds:
+
+ * ``ratio_min`` — higher is better (speedups, relative throughput);
+   fails when ``fresh < baseline * (1 - tol)``.  Bands are generous
+   (default 50 %) because shared CI runners are noisy; the gate exists
+   to catch "the fused path stopped being fused", not 10 % jitter.
+ * ``ratio_max`` — lower is better (telemetry tax); fails when
+   ``fresh > baseline * (1 + tol)``.
+ * ``at_most``  — fresh must not exceed the baseline (jit/dispatch
+   counts: these are exact integers, any increase is a retracing bug).
+ * ``exact``    — bitwise flags and mode markers must match (e.g. the
+   chunked-vs-monolithic window pin, the ``*_quick`` mode flags that
+   keep the comparison apples-to-apples).
+
+A file missing on either side is skipped with a note (baselines may
+predate a metric; a ``--only`` benchmark run may not produce every
+file) — only a metric present on BOTH sides can fail.
+
+CLI: ``python -m benchmarks.bench_diff --baseline benchmarks/baselines
+--fresh .`` exits 1 if any metric lands outside its band (CI wires this
+after ``benchmarks/run.py --quick`` and after ``python -m repro.obs``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+# (file, metric, kind, tol) — tol unused for at_most/exact
+REGISTRY: Tuple[Tuple[str, str, str, float], ...] = (
+    ("BENCH_hotloop.json", "hotloop_speedup", "ratio_min", 0.5),
+    ("BENCH_hotloop.json", "wall_speedup", "ratio_min", 0.5),
+    ("BENCH_hotloop.json", "jits_after", "at_most", 0.0),
+    ("BENCH_hotloop.json", "jits_capacity", "at_most", 0.0),
+    ("BENCH_hotloop.json", "jits_segment", "at_most", 0.0),
+    ("BENCH_hotloop.json", "jits_hotloop_fused", "at_most", 0.0),
+    ("BENCH_wavefront.json", "wavefront_speedup", "ratio_min", 0.5),
+    ("BENCH_wavefront.json", "jits_wavefront", "at_most", 0.0),
+    ("BENCH_tracegen.json", "tracegen_speedup", "ratio_min", 0.5),
+    ("BENCH_tracegen.json", "tracegen_quick", "exact", 0.0),
+    ("BENCH_streaming.json", "streaming_relative", "ratio_min", 0.5),
+    ("BENCH_streaming.json", "jits_streaming_warm", "at_most", 0.0),
+    ("BENCH_streaming.json", "streaming_quick", "exact", 0.0),
+    ("BENCH_shardsweep.json", "shardsweep_relative", "ratio_min", 0.5),
+    ("BENCH_shardsweep.json", "jits_shardsweep", "at_most", 0.0),
+    ("BENCH_shardsweep.json", "shardsweep_quick", "exact", 0.0),
+    ("BENCH_obs.json", "telemetry_tax", "ratio_max", 0.5),
+    ("BENCH_obs.json", "windows_bitwise_chunked_vs_monolithic",
+     "exact", 0.0),
+)
+
+
+def _check(kind: str, base, fresh, tol: float) -> bool:
+    """True iff ``fresh`` is inside the band anchored at ``base``."""
+    if kind == "ratio_min":
+        return float(fresh) >= float(base) * (1.0 - tol)
+    if kind == "ratio_max":
+        return float(fresh) <= float(base) * (1.0 + tol)
+    if kind == "at_most":
+        return float(fresh) <= float(base)
+    if kind == "exact":
+        return fresh == base
+    raise ValueError(f"unknown metric kind {kind!r}")
+
+
+def diff(baseline_dir: str, fresh_dir: str
+         ) -> Tuple[List[Dict[str, object]], List[str]]:
+    """Compare every REGISTRY metric present on both sides.
+
+    Returns ``(rows, failures)``: one row per metric with its verdict
+    (``ok`` / ``FAIL`` / ``skip:...``), and the failure messages.
+    """
+    rows: List[Dict[str, object]] = []
+    failures: List[str] = []
+    docs: Dict[Tuple[str, str], object] = {}
+
+    def load(side: str, d: str, fname: str):
+        key = (side, fname)
+        if key not in docs:
+            path = os.path.join(d, fname)
+            docs[key] = json.load(open(path)) if os.path.exists(path) \
+                else None
+        return docs[key]
+
+    for fname, metric, kind, tol in REGISTRY:
+        base_doc = load("base", baseline_dir, fname)
+        fresh_doc = load("fresh", fresh_dir, fname)
+        row: Dict[str, object] = {"file": fname, "metric": metric,
+                                  "kind": kind, "tol": tol}
+        if base_doc is None or fresh_doc is None:
+            row["verdict"] = "skip:missing-file"
+        elif metric not in base_doc or metric not in fresh_doc:
+            row["verdict"] = "skip:missing-metric"
+        else:
+            b, f = base_doc[metric], fresh_doc[metric]
+            row["baseline"], row["fresh"] = b, f
+            if _check(kind, b, f, tol):
+                row["verdict"] = "ok"
+            else:
+                row["verdict"] = "FAIL"
+                failures.append(
+                    f"{fname}:{metric} [{kind} tol={tol}] "
+                    f"baseline={b} fresh={f}")
+        rows.append(row)
+    return rows, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff fresh BENCH_*.json against committed baselines")
+    ap.add_argument("--baseline", required=True,
+                    help="directory holding the committed baseline files")
+    ap.add_argument("--fresh", required=True,
+                    help="directory holding the freshly produced files")
+    ap.add_argument("--json", default="",
+                    help="write the per-metric verdict table here")
+    args = ap.parse_args(argv)
+    rows, failures = diff(args.baseline, args.fresh)
+    w = max(len(f"{r['file']}:{r['metric']}") for r in rows)
+    for r in rows:
+        name = f"{r['file']}:{r['metric']}"
+        detail = "" if "baseline" not in r else \
+            f"  baseline={r['baseline']} fresh={r['fresh']}"
+        print(f"{name:<{w}}  {r['verdict']}{detail}")
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump({"rows": rows, "failures": failures}, f, indent=1,
+                      sort_keys=True)
+    if failures:
+        print(f"\n{len(failures)} metric(s) regressed past their band:",
+              file=sys.stderr)
+        for m in failures:
+            print("  " + m, file=sys.stderr)
+        return 1
+    print(f"\nall {sum(r['verdict'] == 'ok' for r in rows)} compared "
+          f"metrics inside their bands")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

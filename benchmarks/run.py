@@ -24,7 +24,8 @@ def main(argv=None) -> None:
                             fig10_row_hit, fig11_energy, fig12_capacity,
                             fig13_segment_size, fig14_replacement,
                             fig15_insertion, fig16_scheduler,
-                            fig17_scenarios, overhead, sweep_engine)
+                            fig17_scenarios, fig_tail_latency, overhead,
+                            sweep_engine)
 
     if args.quick:
         common.set_quick()
@@ -51,6 +52,9 @@ def main(argv=None) -> None:
          lambda s: s.get("frfcfs_qd16")),
         ("fig17_scenarios", fig17_scenarios,
          lambda s: s.get("embed/figcache_fast")),
+        ("fig_tail_latency", fig_tail_latency,
+         lambda s: (f"p99_gain={s['p99_gain_mean']}x "
+                    f"zipf={s.get('zipf_reuse/p99_gain')}")),
         ("sweep_engine", sweep_engine,
          lambda s: (f"jits {s['jits_before']}->{s['jits_after']} "
                     f"cap={s['jits_capacity']} seg={s['jits_segment']} "

@@ -28,7 +28,8 @@ ap.add_argument("--scenario", default="app",
                      "device-generated scenario family")
 ap.add_argument("--telemetry", action="store_true",
                 help="also stream a telemetry-enabled FIGCache run and "
-                     "print the per-window hit-rate table (DESIGN.md §15)")
+                     "print the per-window table — hit rates plus the §16 "
+                     "p50/p99 tail-latency columns (DESIGN.md §15/§16)")
 args, _ = ap.parse_known_args()
 
 # --- 1. paper reproduction: FIGCache vs Base -------------------------------
@@ -60,12 +61,19 @@ if args.telemetry:
                            per_channel=N_REQS, seed=1)
     tr = jax.tree.map(lambda a: a[0], workload.generate(spec))
     cfg = dataclasses.replace(paper_config("figcache_fast"),
-                              telemetry=max(32, N_REQS // 16))
+                              telemetry=max(32, N_REQS // 16), slo_ns=100)
     col = WindowCollector()
     streaming.simulate_stream(
         streaming.iter_chunks(tr, max(64, N_REQS // 8)), cfg, telemetry=col)
-    print(f"[1t] per-window telemetry ({fam}, period {cfg.telemetry} reqs):")
+    print(f"[1t] per-window telemetry ({fam}, period {cfg.telemetry} reqs; "
+          f"p50/p99 from the §16 in-scan histogram):")
     print(window_table(col.series(), max_rows=12))
+    from repro.obs import latency
+    pct = latency.percentiles(col.cumulative()["hist"].sum(axis=(0, 1)))
+    s = latency.slo_summary(col.series(), cfg.slo_ns)
+    print(f"[1t] whole-run tails: p50 {pct['p50'].value:.1f}  "
+          f"p99 {pct['p99'].value:.1f}  p999 {pct['p999'].value:.1f} ns; "
+          f"over-SLO({cfg.slo_ns}ns) {100 * s['rate']:.2f}%")
 
 # --- 2. FIGARO: fine-grained relocation between slow pool and fast pool ---
 from repro.kernels.figaro_reloc.ops import reloc_segments

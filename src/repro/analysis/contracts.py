@@ -226,6 +226,41 @@ def _c_telemetry_sweep() -> int:
     return dram.jit_trace_count() - j0
 
 
+@contract("obs.tail-latency",
+          "the §16 latency-distribution path — histogram planes in the "
+          "telemetry carry, chunked collection, and host-side percentile/"
+          "SLO extraction — costs ONE compiled telemetry step for a whole "
+          "SLO-threshold grid: slo_ns is traced (MechParams), so threshold "
+          "sweeps batch instead of recompiling, and percentile extraction "
+          "is pure host numpy (no extra programs)", 1,
+          ("StaticConfig (incl. telemetry period)", "variant",
+           "segment/batch shapes"))
+def _c_tail_latency() -> int:
+    import dataclasses
+    import numpy as np
+    from repro.core import dram, streaming
+    from repro.core.timing import paper_config, shared_static
+    from repro.obs import latency
+    from repro.obs.telemetry import WindowCollector
+    cfgs = [dataclasses.replace(paper_config("figcache_fast"),
+                                telemetry=64, slo_ns=slo)
+            for slo in (50, 100, 200, 400)]
+    static = shared_static(cfgs)
+    tr = _toy_trace()
+    col = WindowCollector()
+    j0 = dram.jit_trace_count()
+    jax.block_until_ready(streaming.sweep_stream(
+        streaming.iter_chunks(tr, 64), static, _stack_params(cfgs),
+        telemetry=col))
+    for p, cfg in enumerate(cfgs):
+        cum = col.cumulative(index=(p,))
+        pct = latency.percentiles(cum["hist"].sum(axis=(0, 1)))
+        assert np.isfinite(pct["p99"].value)
+        s = col.series(index=(p,))
+        assert int(s["w_slo"].sum()) == int(cum["slo"].sum())
+    return dram.jit_trace_count() - j0
+
+
 @contract("workload.generate_many",
           "a workload grid sharing one generator structure synthesizes as "
           "ONE vmapped compiled call", 1,

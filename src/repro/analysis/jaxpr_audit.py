@@ -154,8 +154,31 @@ ORCH_CARRY_BOUNDS: Dict[str, CarryBound] = {
 # add stays within ``LAT_SUM_CAP + T_MAX == INT32_MAX`` on every segment.
 # The ring-buffer rows hold copies of already-clamped window vectors, and
 # the closed-window cursor ``n`` is bounded by the ring height W <= T + 2.
+# §16 latency-distribution extension of the telemetry carry
+# (``dram._TelScan.{hist, slo, buf_hist}`` + the packed window histogram
+# lane).  Every histogram cell counts requests — one scatter-add of 0/1
+# per serial step — so per-bucket counts are bounded by the scan capacity
+# ``TRACE_LEN_BOUND``, never by simulated time; the same goes for the
+# per-core over-SLO counts (at most one per request, compared exactly
+# in-scan).  Ring rows are copies of the per-window histogram.
+HIST_CARRY_BOUNDS: Dict[str, CarryBound] = {
+    "hist_win": CarryBound(
+        "per-window bucket counts: one request per serial step (resets "
+        "each window, so <= TRACE_LEN_BOUND even unwindowed)", step=1),
+    "hist": CarryBound(
+        "cumulative per-(rw, core, bucket) request counts: +1 element "
+        "per real request, <= TRACE_LEN_BOUND", step=1),
+    "slo": CarryBound(
+        "cumulative per-core over-SLO request count <= TRACE_LEN_BOUND",
+        step=1),
+    "buf_hist": CarryBound(
+        "ring rows are copies of per-window bucket counts "
+        "<= TRACE_LEN_BOUND", abs_max=TRACE_LEN_BOUND + 1),
+}
+
 TEL_CARRY_BOUNDS: Dict[str, CarryBound] = {
     **SIM_CARRY_BOUNDS,
+    **HIST_CARRY_BOUNDS,
     "scalars": CarryBound(
         "per-window deltas bounded by window period x max issue width "
         "(one request per serial step); time lanes grow by at most "
@@ -627,11 +650,15 @@ def _tel_carry_names() -> Tuple[str, ...]:
     carry plus the ``dram._TelScan`` extension (derived from an actual
     pytree so a field rename cannot silently desynchronize the audit)."""
     from repro.core import dram
-    cur = dram._tel_pack(dram.init_telemetry())
+    tel = dram.init_telemetry()
+    cur = dram._tel_pack(tel.win)
     scan = dram._TelScan(
         cur=cur,
+        hist=tel.hist,
+        slo=tel.slo,
         buf_scalars=jnp.zeros((1,) + cur.scalars.shape, jnp.int32),
         buf_banks=jnp.zeros((1,) + cur.bank_issues.shape, jnp.int32),
+        buf_hist=jnp.zeros((1,) + cur.hist_win.shape, jnp.int32),
         n=jnp.int32(0))
     from repro.core.timing import paper_config
     static = paper_config("figcache_fast").static

@@ -94,6 +94,16 @@ NOOP_ISSUE = int(fts_lib.BIG)
 # bitwise-invisible below the cap (tests/test_analysis.py pins this).
 LAT_SUM_CAP = (1 << 30) - 1
 
+# Log2 latency-histogram buckets (DESIGN.md §16).  Bucket 0 holds exactly
+# lat_ns == 0; bucket b >= 1 holds lat_ns in [2**(b-1), 2**b - 1] — i.e.
+# the bucket index is the bit length of the latency, computed in-scan by
+# one count-leading-zeros op (``32 - lax.clz``), no float log.  A request's
+# latency in ns is bounded by simulated time / 8 < 2**27, so 28 buckets
+# cover the whole range exactly; the defensive clip into the last bucket
+# never fires within the T_MAX contract.  ``obs/latency.py`` holds the
+# host-side mirror (bounds, percentiles, CDF).
+HIST_BUCKETS = 28
+
 
 def noop_pad(trace: Trace, length: int) -> Trace:
     """Right-pad a (T,)/(C, T) trace to ``length`` requests with no-ops.
@@ -192,13 +202,15 @@ class TelemetryWindows(NamedTuple):
     position makes the series invariant to chunking and to no-op padding —
     the same property the counters themselves have.
 
-    All leaves are int32 scalars except ``w_bank_issues`` ``(n_banks,)``.
+    All leaves are int32 scalars except the plane fields ``w_bank_issues``
+    ``(n_banks,)`` and ``w_hist`` ``(HIST_BUCKETS,)``.
     Every count field is bounded by the window period (one real request
     retires per serial scan step) except ``w_reloc_blocks`` (period x
     seg_blocks) and the time-like sums ``w_lat_ns``/``w_bus_wait``/
     ``w_mshr_wait``, which clamp at ``LAT_SUM_CAP`` exactly like
     ``Counters.lat_sum_ns``.  The bounds are declared to the sanitizer in
-    ``analysis/jaxpr_audit.py`` (``TEL_CARRY_BOUNDS``).
+    ``analysis/jaxpr_audit.py`` (``TEL_CARRY_BOUNDS`` /
+    ``HIST_CARRY_BOUNDS``).
     """
     win_idx: jax.Array        # ordinal of the accumulating window
     w_reqs: jax.Array         # real requests retired this window
@@ -211,7 +223,9 @@ class TelemetryWindows(NamedTuple):
     w_lat_ns: jax.Array       # summed request latency (ns, clamped)
     w_bus_wait: jax.Array     # ticks bursts waited on the busy data bus
     w_mshr_wait: jax.Array    # ticks requests stalled on a full MSHR
+    w_slo: jax.Array          # requests over MechParams.slo_ns this window
     w_bank_issues: jax.Array  # (n_banks,) requests issued per bank
+    w_hist: jax.Array         # (HIST_BUCKETS,) log2 latency histogram (§16)
 
 
 class TelemetryFrame(NamedTuple):
@@ -233,21 +247,47 @@ class TelemetryFrame(NamedTuple):
     win: TelemetryWindows     # leaves (W, ...), closed-window accumulators
 
 
-def init_telemetry(geom: DRAMGeometry = GEOM) -> TelemetryWindows:
+class TelemetryState(NamedTuple):
+    """The cross-segment telemetry cursor (``SimState.tel``, DESIGN.md
+    §15/§16): the open (accumulating) window plus the run-cumulative
+    latency-distribution planes, which never reset at window boundaries
+    and therefore live OUTSIDE the per-window ring buffer.
+
+    ``hist`` is the §16 histogram pair: plane 0 counts reads, plane 1
+    writes, so ``hist.sum(0)`` is the total distribution and each plane's
+    total mass reconciles exactly with ``Counters.reads``/``writes``
+    (tests/test_obs.py pins the identity).  ``slo`` counts requests whose
+    latency exceeded ``MechParams.slo_ns`` — counted per request in-scan,
+    never estimated from buckets.  The whole pytree is checkpointable and
+    threads through the streaming drivers unchanged.
+    """
+    win: TelemetryWindows    # the open window's accumulators
+    hist: jax.Array          # (2, n_cores, HIST_BUCKETS) cumulative rd/wr
+    slo: jax.Array           # (n_cores,) cumulative over-SLO requests
+
+
+def init_telemetry(geom: DRAMGeometry = GEOM) -> TelemetryState:
     z = jnp.int32(0)
-    return TelemetryWindows(z, z, z, z, z, z, z, z, z, z, z,
-                            jnp.zeros((geom.n_banks,), jnp.int32))
+    win = TelemetryWindows(z, z, z, z, z, z, z, z, z, z, z, z,
+                           jnp.zeros((geom.n_banks,), jnp.int32),
+                           jnp.zeros((HIST_BUCKETS,), jnp.int32))
+    return TelemetryState(
+        win=win,
+        hist=jnp.zeros((2, geom.n_cores, HIST_BUCKETS), jnp.int32),
+        slo=jnp.zeros((geom.n_cores,), jnp.int32))
 
 
+# non-scalar (plane) window fields, excluded from the packed scalar lane
+_TEL_PLANES = ("w_bank_issues", "w_hist")
 # the scalar accumulators, in their packed-lane order
 _TEL_SCALARS = tuple(f for f in TelemetryWindows._fields
-                     if f != "w_bank_issues")
+                     if f not in _TEL_PLANES)
 
 
 class TelemetryCarry(NamedTuple):
     """Packed IN-SCAN form of ``TelemetryWindows`` (DESIGN.md §15).
 
-    The scalar accumulators ride one (11,) int32 vector lane so the scan
+    The scalar accumulators ride one (12,) int32 vector lane so the scan
     body pays O(1) tensor ops for the whole window update, not one per
     metric — measured, this is the difference between a ~1.2x and a
     ~1.05x telemetry tax.  ``_tel_pack`` / ``_tel_unpack`` convert at
@@ -255,8 +295,9 @@ class TelemetryCarry(NamedTuple):
     frames, checkpoints, the collector) sees the named
     ``TelemetryWindows`` form only.
     """
-    scalars: jax.Array       # (11,) int32 — ``_TEL_SCALARS`` lane order
+    scalars: jax.Array       # (12,) int32 — ``_TEL_SCALARS`` lane order
     bank_issues: jax.Array   # (n_banks,) int32
+    hist_win: jax.Array      # (HIST_BUCKETS,) int32 — this window's hist
 
 
 class _TelScan(NamedTuple):
@@ -268,12 +309,17 @@ class _TelScan(NamedTuple):
     outputs: a telemetry scan therefore materializes no (T, ...) output
     slabs at all — only this fixed (W, ...) buffer, sized by
     ``_scan_segment`` per segment length — which is what keeps the
-    telemetry tax in single digits.  Segment-local: ``SimState`` carries
-    only the unpacked cursor across segments.
+    telemetry tax in single digits.  The cumulative §16 planes (``hist``,
+    ``slo``) never reset, so they ride the carry directly with no ring
+    rows.  Segment-local: ``SimState`` carries only the unpacked
+    ``TelemetryState`` across segments.
     """
     cur: TelemetryCarry      # the accumulating window, packed
-    buf_scalars: jax.Array   # (W, 11) int32 — closed windows, oldest first
+    hist: jax.Array          # (2, n_cores, HIST_BUCKETS) cumulative rd/wr
+    slo: jax.Array           # (n_cores,) cumulative over-SLO requests
+    buf_scalars: jax.Array   # (W, 12) int32 — closed windows, oldest first
     buf_banks: jax.Array     # (W, n_banks) int32
+    buf_hist: jax.Array      # (W, HIST_BUCKETS) int32
     n: jax.Array             # () int32 — closed-window count
 
 
@@ -281,17 +327,28 @@ def _tel_pack(tel: TelemetryWindows) -> TelemetryCarry:
     return TelemetryCarry(
         scalars=jnp.stack([jnp.asarray(getattr(tel, f), jnp.int32)
                            for f in _TEL_SCALARS], axis=-1),
-        bank_issues=tel.w_bank_issues)
+        bank_issues=tel.w_bank_issues,
+        hist_win=tel.w_hist)
 
 
 def _tel_unpack(carry: TelemetryCarry) -> TelemetryWindows:
     lanes = {f: carry.scalars[..., i] for i, f in enumerate(_TEL_SCALARS)}
-    return TelemetryWindows(w_bank_issues=carry.bank_issues, **lanes)
+    return TelemetryWindows(w_bank_issues=carry.bank_issues,
+                            w_hist=carry.hist_win, **lanes)
 
 
-def _telemetry_step(tel: _TelScan, period: int, *, real, bank,
+def hist_bucket(lat_ns: jax.Array) -> jax.Array:
+    """The §16 log2 bucket of a (non-negative int32) latency: its bit
+    length, clipped into the last bucket.  Exact integer arithmetic — one
+    ``clz`` — so the host-side mirror (``obs.latency.bucket_index``) can
+    reproduce it bit-for-bit."""
+    bits = 32 - jax.lax.clz(jnp.maximum(lat_ns, 0))
+    return jnp.minimum(bits, HIST_BUCKETS - 1)
+
+
+def _telemetry_step(tel: _TelScan, period: int, *, real, bank, core,
                     is_write, row_hit, hit, n_ins, moved, lat_ns, bus_wait,
-                    mshr_wait, step_id):
+                    mshr_wait, slo_ns, step_id):
     """Advance the window accumulators by one (possibly no-op) request.
 
     A request belonging to the next window (``step_id`` at the boundary)
@@ -315,8 +372,20 @@ def _telemetry_step(tel: _TelScan, period: int, *, real, bank,
     ``Counters.lat_sum_ns``: a no-op for the count lanes (bounded by the
     window period anyway), the wrap-free saturation bound for the
     time-sum lanes (cap + per-step bound == INT32_MAX).
+
+    The §16 latency-distribution planes follow the same live-row
+    discipline: the per-window histogram resets with the other window
+    lanes and its post-update value lands in ring row ``n`` every step;
+    the cumulative read/write planes and the over-SLO counts are plain
+    monotone scatter-adds (one element each per real request), so XLA
+    keeps every plane update in place.  ``over`` compares the request's
+    EXACT latency against the traced threshold — over-SLO accounting is
+    never derived from bucket boundaries.
     """
     vec = tel.cur.scalars
+    r32 = real.astype(jnp.int32)
+    bucket = hist_bucket(lat_ns)
+    over = real & (slo_ns > 0) & (lat_ns > slo_ns)
     # windows never skip (step_id advances by exactly 1 per real request),
     # so the boundary test is a multiply against the NEXT window's start —
     # not a per-step integer division
@@ -324,7 +393,6 @@ def _telemetry_step(tel: _TelScan, period: int, *, real, bank,
     crossed = real & (step_id >= w * period)
     n = tel.n + crossed.astype(jnp.int32)
     z = jnp.int32(0)
-    r32 = real.astype(jnp.int32)
     # reset lanes on a boundary (win_idx lane resets TO the new ordinal),
     # then fold this request's deltas in, then saturate
     reset = jnp.zeros_like(vec).at[0].set(w)
@@ -340,13 +408,21 @@ def _telemetry_step(tel: _TelScan, period: int, *, real, bank,
         jnp.where(real, lat_ns, z),               # w_lat_ns
         jnp.where(real, bus_wait, z),             # w_bus_wait
         jnp.where(real, mshr_wait, z),            # w_mshr_wait
+        over.astype(jnp.int32),                   # w_slo
     ])
     vec = jnp.minimum(jnp.where(crossed, reset, vec) + delta, LAT_SUM_CAP)
     banks = jnp.where(crossed, jnp.zeros_like(tel.cur.bank_issues),
                       tel.cur.bank_issues).at[bank].add(r32)
+    hist_w = jnp.where(crossed, jnp.zeros_like(tel.cur.hist_win),
+                       tel.cur.hist_win).at[bucket].add(r32)
+    # cumulative planes: one scatter-add each, never reset
+    hist = tel.hist.at[is_write.astype(jnp.int32), core, bucket].add(r32)
+    slo = tel.slo.at[core].add(over.astype(jnp.int32))
     buf_s = tel.buf_scalars.at[n].set(vec)
     buf_b = tel.buf_banks.at[n].set(banks)
-    return _TelScan(TelemetryCarry(vec, banks), buf_s, buf_b, n)
+    buf_h = tel.buf_hist.at[n].set(hist_w)
+    return _TelScan(TelemetryCarry(vec, banks, hist_w), hist, slo,
+                    buf_s, buf_b, buf_h, n)
 
 
 def _lisa_hops(row: jax.Array, geom: DRAMGeometry) -> jax.Array:
@@ -703,11 +779,12 @@ def make_step(static: StaticConfig, geom: DRAMGeometry = GEOM,
         # structural, not numerical (tests/test_obs.py golden-pins it)
         if static.telemetry:
             tel = _telemetry_step(
-                tel, static.telemetry, real=real, bank=bank,
+                tel, static.telemetry, real=real, bank=bank, core=core,
                 is_write=req.is_write, row_hit=dec.row_hit, hit=dec.hit,
                 n_ins=dec.n_ins, moved=dec.moved, lat_ns=lat_ns,
                 bus_wait=done - (t0 + dec.pre_act + p.cas + p.bl),
-                mshr_wait=t_ready - req.t_issue, step_id=step_id)
+                mshr_wait=t_ready - req.t_issue, slo_ns=p.slo_ns,
+                step_id=step_id)
         return (state, cnt, tel), None
 
     return step
@@ -888,15 +965,16 @@ class SimState(NamedTuple):
     per channel (``sim_init(..., channels=C)``), ``(P, [C,] ...)`` per
     params point (``sim_init(..., batch=P)`` / ``run_sweep_segment``).
 
-    ``tel`` is the telemetry window cursor (DESIGN.md §15): ``None`` —
-    an EMPTY pytree subtree, so the disabled carry has exactly the seed's
-    leaves — unless ``static.telemetry`` is set, in which case threading
-    it across segments is what makes the chunked window series bitwise
-    equal to the monolithic one.
+    ``tel`` is the telemetry cursor (DESIGN.md §15/§16: the open window
+    plus the cumulative latency-distribution planes): ``None`` — an EMPTY
+    pytree subtree, so the disabled carry has exactly the seed's leaves —
+    unless ``static.telemetry`` is set, in which case threading it across
+    segments is what makes the chunked window series bitwise equal to the
+    monolithic one.
     """
     bank: BankState
     cnt: Counters
-    tel: TelemetryWindows | None = None
+    tel: TelemetryState | None = None
 
 
 def sim_init(static: StaticConfig, geom: DRAMGeometry = GEOM,
@@ -934,14 +1012,18 @@ def _scan_segment(step, params: MechParams, trace: Trace, state: SimState,
         # the very first step still closes a complete row.
         T = trace.t_issue.shape[-1]
         W = min(T, T // period + 2) + 1
-        cur = _tel_pack(state.tel)
+        cur = _tel_pack(state.tel.win)
         tel0 = _TelScan(
             cur=cur,
+            hist=state.tel.hist,
+            slo=state.tel.slo,
             buf_scalars=jnp.zeros(
                 (W, len(_TEL_SCALARS)), jnp.int32).at[0].set(cur.scalars),
             buf_banks=jnp.zeros(
-                (W, state.tel.w_bank_issues.shape[-1]),
+                (W, state.tel.win.w_bank_issues.shape[-1]),
                 jnp.int32).at[0].set(cur.bank_issues),
+            buf_hist=jnp.zeros(
+                (W, HIST_BUCKETS), jnp.int32).at[0].set(cur.hist_win),
             n=jnp.int32(0))
     carry, _ = jax.lax.scan(functools.partial(step, params),
                             (state.bank, state.cnt, tel0), trace)
@@ -950,8 +1032,11 @@ def _scan_segment(step, params: MechParams, trace: Trace, state: SimState,
         return SimState(bank, cnt, None), None
     frames = TelemetryFrame(
         valid=jnp.arange(tel.buf_scalars.shape[0]) < tel.n,
-        win=_tel_unpack(TelemetryCarry(tel.buf_scalars, tel.buf_banks)))
-    return SimState(bank, cnt, _tel_unpack(tel.cur)), frames
+        win=_tel_unpack(TelemetryCarry(tel.buf_scalars, tel.buf_banks,
+                                       tel.buf_hist)))
+    return SimState(bank, cnt,
+                    TelemetryState(_tel_unpack(tel.cur), tel.hist,
+                                   tel.slo)), frames
 
 
 def _scan_one(step, params: MechParams, trace: Trace,

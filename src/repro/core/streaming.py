@@ -28,6 +28,14 @@ Pipeline, per stream:
  * every ``checkpoint_every`` segments the carry is snapshotted via
    ``checkpoint.save_sim_state``; ``resume_stream`` restores it and skips
    the already-simulated prefix.
+
+Telemetry rides the same carry: with ``cfg.telemetry > 0`` and a
+``telemetry=`` collector, segments run through ``run_segment_tel`` /
+``run_sweep_segment_tel`` and the §15 window series — including the §16
+per-window latency-histogram rows and the cumulative histogram / SLO
+planes in ``SimState.tel`` — is chunk-invariant by the same argument:
+windows are indexed by the cumulative REAL-request count, which no
+chunking or no-op padding can move.
 """
 from __future__ import annotations
 

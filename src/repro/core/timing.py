@@ -259,6 +259,10 @@ class MechParams(NamedTuple):
     benefit_max: jax.Array
     n_slots: jax.Array
     segs_per_row: jax.Array
+    # per-request latency SLO threshold in ns (<= 0 disables the in-scan
+    # over-SLO count; DESIGN.md §16).  Traced so an SLO grid batches
+    # through one compiled scan; telemetry-off programs never read it.
+    slo_ns: jax.Array
 
 
 @dataclasses.dataclass(frozen=True)
@@ -273,6 +277,10 @@ class MechConfig:
     fts_kernel: bool = False       # fuse lookup+victim via kernels/fts_lookup
     telemetry: int = 0             # in-scan window period in real requests;
                                    # 0 = off (DESIGN.md §15)
+    slo_ns: int = 0                # per-request latency SLO threshold (ns);
+                                   # <= 0 = no over-SLO accounting (§16).
+                                   # Traced (rides MechParams), only read by
+                                   # telemetry-enabled scans.
     # which memory controller serves the trace (DESIGN.md §10): a host-side
     # trace-preprocessing knob — it never enters the compiled scan, so any
     # sched grid shares the scan compilations of its mech/policy grid
@@ -347,6 +355,7 @@ class MechConfig:
             benefit_max=i32((1 << self.benefit_bits) - 1),
             n_slots=i32(self.n_slots if self.has_cache else 1),
             segs_per_row=i32(self.segs_per_row if self.has_cache else 1),
+            slo_ns=i32(self.slo_ns),
         )
 
 

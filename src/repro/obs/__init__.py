@@ -22,7 +22,9 @@ grid, pins chunked-vs-monolithic window series bitwise, renders the
 ``phase_mix`` re-warming time series, and writes ``BENCH_obs.json``.
 """
 from repro.obs.telemetry import WindowCollector, window_table
-from repro.obs.trace import Tracer, chrome_trace, chrome_from_jsonl
+from repro.obs.trace import (Tracer, chrome_trace, chrome_from_jsonl,
+                             telemetry_counter_events)
+from repro.obs import latency
 
 __all__ = ["WindowCollector", "window_table", "Tracer", "chrome_trace",
-           "chrome_from_jsonl"]
+           "chrome_from_jsonl", "telemetry_counter_events", "latency"]

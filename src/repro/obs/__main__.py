@@ -1,21 +1,27 @@
-"""``python -m repro.obs`` — the flight-recorder report (DESIGN.md §15).
+"""``python -m repro.obs`` — the flight-recorder report (DESIGN.md §15/§16).
 
-Four sections, written into ``BENCH_obs.json`` (plus CSV/figure files):
+Five sections, written into ``BENCH_obs.json`` (plus CSV/figure files):
 
  1. **Telemetry tax** on the fig12 capacity grid: the identical chunked
     capacity sweep with telemetry off (``run_sweep_segment``) vs on with
     frames actually collected and fenced (``run_sweep_segment_tel`` +
     collector + ``block()`` — the full cost a telemetry consumer pays).
-    CI trips if tax > 1.15x.
+    Since §16 the on-path includes the latency-histogram planes and the
+    over-SLO accounting; CI trips if the combined tax > 1.25x.
  2. **Chunked-vs-monolithic pin**: the window series of the same grid
     replayed at chunk 64 and as one monolithic segment must be byte-equal
-    for every grid point (the §13 invariance, extended to telemetry).
- 3. **phase_mix re-warming** (the headline figure): per-window FIGCache
+    for every grid point (the §13 invariance, extended to telemetry —
+    histogram rows included).
+ 3. **Tail latency** on the same grid (§16): p50/p99/p999 per grid point
+    from the cumulative histogram planes (with the declared bucket
+    resolution bracket), exact over-SLO counts against ``--slo-ns``, and
+    a per-point latency CDF CSV.
+ 4. **phase_mix re-warming** (the headline figure): per-window FIGCache
     hit rate across phase shifts — the cache visibly re-warms after each
     phase boundary, the dynamic the aggregate counters cannot show.
     Written as CSV always; as PNG too when matplotlib is importable
     (it is NOT a dependency of this repo).
- 4. **Entry-point profile**: compile-vs-execute wall estimates and warm
+ 5. **Entry-point profile**: compile-vs-execute wall estimates and warm
     dispatch counts per registered compile contract (``obs.profile``).
 """
 from __future__ import annotations
@@ -32,17 +38,20 @@ import numpy as np
 from repro.core import streaming, workload
 from repro.core.timing import paper_config, shared_static
 from repro.analysis.contracts import CAPACITY_GRID, _stack_params
+from repro.obs import latency
 from repro.obs.telemetry import WindowCollector, series_csv, window_table
 from repro.obs.profile import profile_contracts
 
-TAX_TRIPWIRE = 1.15
+# combined telemetry tax: window carry + §16 histogram planes + SLO counts
+TAX_TRIPWIRE = 1.25
 _QUICK_PROFILE = ("sweep.capacity", "streaming.chunked-replay",
-                  "obs.telemetry-sweep")
+                  "obs.telemetry-sweep", "obs.tail-latency")
 
 
-def _grid_cfgs(period: int):
+def _grid_cfgs(period: int, slo_ns: int = 0):
     return [dataclasses.replace(paper_config("figcache_fast", **kw),
-                                telemetry=period) for kw in CAPACITY_GRID]
+                                telemetry=period, slo_ns=slo_ns)
+            for kw in CAPACITY_GRID]
 
 
 def _trace(per_channel: int, family: str = "zipf_reuse", seed: int = 11,
@@ -64,7 +73,7 @@ def _one_sweep(tr, static, params, chunk: int, telemetry_on: bool) -> float:
 
 
 def measure_tax(per_channel: int, chunk: int, period: int, reps: int,
-                rounds: int = 2):
+                rounds: int = 2, slo_ns: int = 0):
     """Sections 1+2: wall tax and the chunked-vs-monolithic bitwise pin.
 
     Both paths are deterministic costs measured under one-sided machine
@@ -77,7 +86,7 @@ def measure_tax(per_channel: int, chunk: int, period: int, reps: int,
     recorded in the output for honesty.
     """
     tr = _trace(per_channel)
-    cfgs_on = _grid_cfgs(period)
+    cfgs_on = _grid_cfgs(period, slo_ns)
     cfgs_off = [dataclasses.replace(c, telemetry=0) for c in cfgs_on]
     st_on, st_off = shared_static(cfgs_on), shared_static(cfgs_off)
     p_on, p_off = _stack_params(cfgs_on), _stack_params(cfgs_off)
@@ -109,7 +118,7 @@ def measure_tax(per_channel: int, chunk: int, period: int, reps: int,
     for p in range(len(cfgs_on)):
         a, b = chunked.series(index=(p,)), mono.series(index=(p,))
         for k in a:
-            bitwise &= bool(np.array_equal(a[k], b[k]))
+            bitwise &= bool(np.array_equal(a[k], b[k], equal_nan=True))
     return {
         "grid": "fig12 capacity (figcache_fast, cache_rows 2..64)",
         "per_channel_reqs": per_channel, "chunk_len": chunk,
@@ -120,6 +129,42 @@ def measure_tax(per_channel: int, chunk: int, period: int, reps: int,
         "telemetry_tax_rounds": [round(t, 4) for t in round_taxes],
         "tax_tripwire": TAX_TRIPWIRE,
         "windows_bitwise_chunked_vs_monolithic": bitwise,
+    }, mono, cfgs_on
+
+
+def tail_latency_section(mono: WindowCollector, cfgs, slo_ns: int,
+                         outdir: str):
+    """Section 3 (§16): per-grid-point tail percentiles + SLO + CDF CSV.
+
+    Works off the SAME monolithic collector the bitwise pin used — the
+    cumulative histogram planes are on its final carry, so the section
+    costs no extra simulation."""
+    per_point, hists = [], {}
+    for p, cfg in enumerate(cfgs):
+        cum = mono.cumulative(index=(p,))
+        total = cum["hist"].sum(axis=0)          # rd+wr, summed over cores
+        tot = total.sum(axis=0)
+        pct = latency.percentiles(tot)
+        s = mono.series(index=(p,))
+        name = f"cache_rows={cfg.cache_rows}"
+        hists[name] = tot
+        per_point.append({
+            "cache_rows": cfg.cache_rows,
+            **{k: round(v.value, 2) for k, v in pct.items()},
+            "p99_bracket_ns": [pct["p99"].lo, pct["p99"].hi],
+            "p999_bracket_ns": [pct["p999"].lo, pct["p999"].hi],
+            **{"slo_" + k: round(v, 6)
+               for k, v in latency.slo_summary(s, slo_ns).items()},
+        })
+    csv_path = os.path.join(outdir, "obs_latency_cdf.csv")
+    with open(csv_path, "w", encoding="utf-8") as f:
+        f.write(latency.cdf_csv(hists))
+    return {
+        "slo_ns": slo_ns,
+        "per_point": per_point,
+        "p99_ns_max": max(pt["p99"] for pt in per_point),
+        "p999_ns_max": max(pt["p999"] for pt in per_point),
+        "cdf_csv": csv_path,
     }
 
 
@@ -173,6 +218,10 @@ def main(argv=None) -> int:
                     help="directory for the phase_mix CSV/PNG")
     ap.add_argument("--period", type=int, default=64,
                     help="telemetry window period (real requests)")
+    ap.add_argument("--slo-ns", type=int, default=100,
+                    help="latency SLO threshold for the in-scan over-SLO "
+                         "count (ns; <= 0 disables; 100 sits just under "
+                         "the quick grid's p99, so violations are nonzero)")
     ap.add_argument("--no-profile", action="store_true",
                     help="skip the contract profiling section")
     args = ap.parse_args(argv)
@@ -187,17 +236,27 @@ def main(argv=None) -> int:
 
     print(f"[obs] telemetry tax on the fig12 grid "
           f"({per_channel} reqs, chunk {chunk}, period {args.period})...")
-    tax = measure_tax(per_channel, chunk, args.period, reps, rounds=3)
+    tax, mono, cfgs = measure_tax(per_channel, chunk, args.period, reps,
+                                  rounds=3, slo_ns=args.slo_ns)
     print(f"[obs]   off {tax['telemetry_off_s']}s  on "
           f"{tax['telemetry_on_s']}s  tax {tax['telemetry_tax']}x  "
           f"bitwise={tax['windows_bitwise_chunked_vs_monolithic']}")
+
+    os.makedirs(args.outdir, exist_ok=True)
+    tail = tail_latency_section(mono, cfgs, args.slo_ns, args.outdir)
+    print(f"[obs] tail latency per grid point (SLO {args.slo_ns} ns):")
+    for pt in tail["per_point"]:
+        print(f"[obs]   cache_rows={pt['cache_rows']:<3d} "
+              f"p50 {pt['p50']:>7.1f}  p99 {pt['p99']:>7.1f}  "
+              f"p999 {pt['p999']:>7.1f} ns  "
+              f"over-SLO {pt['slo_rate'] * 100:>5.2f}%")
+    print(f"[obs]   CDF -> {tail['cdf_csv']}")
 
     phase_len = 512 if args.quick else 1024
     pm_reqs = 4096 if args.quick else 8192
     print(f"[obs] phase_mix re-warming series ({pm_reqs} reqs, "
           f"phase_len {phase_len})...")
     pm = phase_mix_series(pm_reqs, args.period, chunk, phase_len)
-    os.makedirs(args.outdir, exist_ok=True)
     csv_path = os.path.join(args.outdir, "obs_phase_mix.csv")
     with open(csv_path, "w", encoding="utf-8") as f:
         f.write(series_csv(pm))
@@ -221,6 +280,7 @@ def main(argv=None) -> int:
 
     record = {
         "bench": "obs", "quick": args.quick, **tax,
+        "tail_latency": tail,
         "phase_mix": {
             "n_windows": int(len(pm["win_idx"])),
             "phase_len": phase_len,

@@ -21,7 +21,8 @@ import json
 import os
 from typing import Any, Callable, Dict, List, Optional
 
-__all__ = ["Tracer", "chrome_trace", "chrome_from_jsonl", "read_jsonl"]
+__all__ = ["Tracer", "chrome_trace", "chrome_from_jsonl", "read_jsonl",
+           "counter_events", "telemetry_counter_events"]
 
 
 def _encode(rec: Dict[str, Any]) -> str:
@@ -62,6 +63,12 @@ class Tracer:
         """One instant event (retry, straggler re-issue, quarantine...)."""
         self._emit("i", name, attrs)
 
+    def counter(self, name: str, **values: Any) -> None:
+        """One Chrome counter sample (``ph="C"``): ``values`` are the
+        numeric series of the named counter track — Perfetto renders each
+        key as a line on that track."""
+        self._emit("C", name, {k: float(v) for k, v in values.items()})
+
     def begin(self, name: str, **attrs: Any) -> None:
         self._emit("B", name, attrs)
 
@@ -93,12 +100,63 @@ def read_jsonl(path: str) -> List[Dict[str, Any]]:
     return out
 
 
+# per-window telemetry series exported as Perfetto counter tracks (each
+# name becomes one track; requests-retired is the time axis)
+_TEL_TRACKS = {
+    "telemetry/hit_rate": ("hit_rate", "row_hit_rate"),
+    "telemetry/latency_ns": ("avg_lat_ns", "p50_ns", "p99_ns"),
+    "telemetry/occupancy": ("w_ins", "w_reloc_blocks", "w_reqs"),
+    "telemetry/slo": ("slo_rate",),
+}
+
+
+def telemetry_counter_events(series: Dict[str, Any], period: int,
+                             pid: int = 0) -> List[Dict[str, Any]]:
+    """Render a ``WindowCollector`` series as ``ph="C"`` counter events.
+
+    One sample per closed window per track in ``_TEL_TRACKS``, timestamped
+    by requests retired (``win_idx * period`` — the chunk-invariant window
+    clock, so the same series always produces the same events).  Feed the
+    result through ``chrome_trace`` (alone or appended to a span log) and
+    the hit-rate/latency/occupancy tracks render in Perfetto alongside the
+    orchestrator's spans.  NaN samples (empty windows) are skipped — the
+    Chrome format has no representation for them."""
+    out: List[Dict[str, Any]] = []
+    n = len(series["win_idx"])
+    for i in range(n):
+        ts = float(series["win_idx"][i]) * period
+        for track, keys in _TEL_TRACKS.items():
+            args = {}
+            for k in keys:
+                v = float(series[k][i])
+                if v == v:                  # drop NaN samples
+                    args[k] = v
+            if args:
+                out.append({"name": track, "ph": "C", "ts": ts,
+                            "pid": pid, "tid": 0, "args": args})
+    return out
+
+
+def counter_events(tracer: Tracer, series: Dict[str, Any],
+                   period: int) -> int:
+    """Append a telemetry series to a live ``Tracer`` as counter records
+    (JSONL-persisted like every other record).  Returns the event count."""
+    recs = telemetry_counter_events(series, period, pid=tracer.pid)
+    for r in recs:
+        tracer.events.append(r)
+        if tracer._f is not None:
+            tracer._f.write(_encode(r) + "\n")
+            tracer._f.flush()
+    return len(recs)
+
+
 def chrome_trace(events: List[Dict[str, Any]]) -> Dict[str, Any]:
     """Re-shape recorded events into the Chrome trace-event format.
 
     Spans the process never closed (it died inside them) get a synthetic
     ``E`` at the last seen timestamp so viewers render them instead of
-    dropping them.  Instant events gain the required thread scope.
+    dropping them.  Instant events gain the required thread scope;
+    counter samples (``ph="C"``) pass through with their numeric args.
     """
     out: List[Dict[str, Any]] = []
     open_stack: List[Dict[str, Any]] = []

@@ -23,11 +23,23 @@ Five contract families:
  5. **Chrome export.**  The Perfetto/chrome://tracing export of a real
     span log validates against the trace-event schema (required keys,
     known phases, balanced B/E nesting with synthetic closes flagged).
+ 6. **Tail latency (DESIGN.md §16, ISSUE 10).**  The in-scan latency
+    histogram's mass reconciles exactly with ``Counters`` per
+    (mechanism x controller), the window time-sums stay inside the
+    bucket-implied bracket even under ``LAT_SUM_CAP`` saturation,
+    percentile extraction is pinned against an exact-sort oracle within
+    the declared bucket resolution, SLO violations are counted exactly,
+    zero-request windows degrade to explicit NaN/0, counter events
+    round-trip through the Chrome exporter, and the ``bench_diff``
+    trajectory gate fails on an injected regression.
 """
 import dataclasses
+import importlib.util
 import json
 import pathlib
+import warnings
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -36,8 +48,10 @@ from repro.core import dram, streaming, traces
 from repro.core.timing import (SCHED_FCFS, SchedConfig, paper_config,
                                shared_static)
 from repro.launch import orchestrator as orch_mod
+from repro.obs import latency
 from repro.obs.telemetry import WindowCollector, series_csv, window_table
-from repro.obs.trace import Tracer, chrome_from_jsonl, read_jsonl
+from repro.obs.trace import (Tracer, chrome_from_jsonl, counter_events,
+                             read_jsonl)
 from repro.runtime.faults import FaultEvent, FaultPlan, InjectedKill
 
 MECHS = ("base", "lldram", "lisa_villa", "figcache_slow", "figcache_fast",
@@ -214,6 +228,8 @@ def test_series_chunk_invariance(period):
     _stream(tr, cfg, chunk=1 << 16, collector=mono)
     assert mono.n_segments == 1
     ref = mono.series()
+    # the §16 histogram rows and derived tail series ride the same pin
+    assert "w_hist" in ref and "p50_ns" in ref and "p99_ns" in ref
     assert len(ref["win_idx"]) == -(-320 // period)
     for L in (1, 7):
         col = WindowCollector()
@@ -418,3 +434,243 @@ def test_compile_contract_registered():
     from repro.analysis import contracts
     assert "obs.telemetry-sweep" in contracts.REGISTRY
     assert contracts.check_contract("obs.telemetry-sweep") == []
+
+
+# ---------------------------------------------------------------------------
+# 6. §16 latency histograms, percentiles, SLO accounting (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+SLO_NS = 40  # sits inside _reuse_trace's latency range: violations nonzero
+
+
+@pytest.mark.parametrize("sid", list(SCHEDS), ids=list(SCHEDS))
+@pytest.mark.parametrize("mech", MECHS)
+def test_hist_mass_reconciles_with_counters(mech, sid):
+    """Histogram mass == Counters totals, exactly, per combo: the read
+    plane is ``Counters.reads``, the write plane ``writes``, the per-core
+    mass ``req_cnt`` — and every window row's mass is its request count."""
+    tr = _reuse_trace()
+    cfg = dataclasses.replace(_cfg(mech, sched=SCHEDS[sid]),
+                              telemetry=PERIOD, slo_ns=SLO_NS)
+    col = WindowCollector()
+    cnt = _stream(tr, cfg, collector=col)
+    cum = col.cumulative()
+    assert int(cum["hist"][0].sum()) == int(cnt.reads), (mech, sid)
+    assert int(cum["hist"][1].sum()) == int(cnt.writes), (mech, sid)
+    assert np.array_equal(cum["hist"].sum(axis=(0, 2)),
+                          np.asarray(cnt.req_cnt, np.int64)), (mech, sid)
+    s = col.series()
+    assert np.array_equal(s["w_hist"].sum(axis=1), s["w_reqs"]), (mech, sid)
+    # the exact SLO count is conserved window-by-window, like every lane
+    assert int(s["w_slo"].sum()) == int(cum["slo"].sum()), (mech, sid)
+
+
+def test_lat_sum_inside_hist_bracket():
+    """Bucket-implied bounds bracket the exact window time-sum: with
+    ``lower = sum(h * lo)`` and ``upper = sum(h * hi)``,
+    ``min(CAP, lower) <= w_lat_ns <= min(CAP, upper)`` per window."""
+    tr = _reuse_trace()
+    cfg = dataclasses.replace(_cfg("figcache_fast"), telemetry=PERIOD)
+    col = WindowCollector()
+    _stream(tr, cfg, collector=col)
+    s = col.series()
+    lo, hi = latency.bucket_bounds(dram.HIST_BUCKETS)
+    lower = (s["w_hist"] * lo).sum(axis=1)
+    upper = (s["w_hist"] * hi).sum(axis=1)
+    assert np.all(np.minimum(lower, dram.LAT_SUM_CAP) <= s["w_lat_ns"])
+    assert np.all(s["w_lat_ns"] <= np.minimum(upper, dram.LAT_SUM_CAP))
+
+
+def test_lat_sum_saturation_keeps_hist_mass_exact():
+    """Drive ``_telemetry_step`` directly into ``LAT_SUM_CAP`` saturation
+    (unreachable from a real trace: the MSHR closed loop bounds per-request
+    latency far below what 20 x 2^26 ns needs).  The time-sum lane clamps
+    at the cap; the histogram, request count, and SLO lanes stay exact, so
+    the bracket identity above still holds with the ``min(CAP, .)``."""
+    tel = dram.init_telemetry()
+    cur = dram._tel_pack(tel.win)
+    scan = dram._TelScan(
+        cur=cur, hist=tel.hist, slo=tel.slo,
+        buf_scalars=jnp.zeros((4,) + cur.scalars.shape, jnp.int32),
+        buf_banks=jnp.zeros((4,) + cur.bank_issues.shape, jnp.int32),
+        buf_hist=jnp.zeros((4,) + cur.hist_win.shape, jnp.int32),
+        n=jnp.int32(0))
+    t, f, z = jnp.bool_(True), jnp.bool_(False), jnp.int32(0)
+    big = jnp.int32(1 << 26)          # bucket 27 (the clip bucket)
+    steps = 20                        # 20 * 2^26 > CAP = 2^30 - 1
+    for i in range(steps):
+        scan = dram._telemetry_step(
+            scan, 1 << 20, real=t, bank=z, core=z, is_write=f, row_hit=f,
+            hit=f, n_ins=z, moved=z, lat_ns=big, bus_wait=z, mshr_wait=z,
+            slo_ns=jnp.int32(SLO_NS), step_id=jnp.int32(i))
+    win = dram._tel_unpack(scan.cur)
+    assert int(win.w_lat_ns) == dram.LAT_SUM_CAP        # saturated
+    assert int(win.w_reqs) == steps                     # counts exact
+    assert int(win.w_hist.sum()) == steps               # mass exact
+    assert int(win.w_hist[dram.HIST_BUCKETS - 1]) == steps
+    assert int(win.w_slo) == steps                      # 2^26 > SLO_NS
+    assert int(scan.slo[0]) == steps
+    lo, hi = latency.bucket_bounds(dram.HIST_BUCKETS)
+    lower = int((np.asarray(win.w_hist) * lo).sum())
+    upper = int((np.asarray(win.w_hist) * hi).sum())
+    assert min(lower, dram.LAT_SUM_CAP) <= int(win.w_lat_ns) \
+        <= min(upper, dram.LAT_SUM_CAP)
+
+
+def test_bucket_scheme_host_device_agree():
+    """``obs.latency.bucket_index`` is a bit-exact host mirror of the
+    in-scan ``dram.hist_bucket``, and the published bounds partition."""
+    vals = np.array([0, 1, 2, 3, 4, 7, 8, 127, 128, (1 << 27) - 1,
+                     1 << 27, np.iinfo(np.int32).max], np.int32)
+    dev = np.asarray(jax.vmap(dram.hist_bucket)(jnp.asarray(vals)))
+    assert np.array_equal(dev, latency.bucket_index(vals))
+    lo, hi = latency.bucket_bounds(dram.HIST_BUCKETS)
+    assert lo[0] == hi[0] == 0                   # bucket 0 is exactly 0
+    for b in range(1, dram.HIST_BUCKETS):
+        assert int(latency.bucket_index(np.int64(lo[b]))) == b
+        if b < dram.HIST_BUCKETS - 1:            # last bucket is the clip
+            assert int(latency.bucket_index(np.int64(hi[b]))) == b
+            assert lo[b + 1] == hi[b] + 1        # gap-free partition
+
+
+def test_percentiles_vs_exact_sort_oracle():
+    """period=1 makes every window one request, so ``w_lat_ns`` IS the
+    exact per-request latency series: sort it and pin each extracted
+    percentile inside its declared bucket bracket around the true
+    nearest-rank value — and pin the SLO count against the same oracle."""
+    tr = _reuse_trace()
+    cfg = dataclasses.replace(_cfg("figcache_fast"), telemetry=1,
+                              slo_ns=SLO_NS)
+    col = WindowCollector()
+    _stream(tr, cfg, collector=col)
+    s = col.series()
+    lats = np.sort(s["w_lat_ns"])
+    n = len(lats)
+    cum = col.cumulative()
+    hist = cum["hist"].sum(axis=(0, 1))
+    assert int(hist.sum()) == n == 320
+    for q in latency.QS:
+        p = latency.percentile(hist, q)
+        k = min(max(int(np.ceil(q * n)), 1), n)  # 1-based nearest rank
+        oracle = int(lats[k - 1])
+        assert p.lo <= oracle <= p.hi, (q, oracle, p)
+        assert p.lo <= p.value <= p.hi, (q, p)
+        assert abs(p.value - oracle) <= p.hi - p.lo  # declared resolution
+    assert int(cum["slo"].sum()) == int((s["w_lat_ns"] > SLO_NS).sum())
+    assert (s["w_lat_ns"] > SLO_NS).sum() > 0    # the oracle is non-trivial
+
+
+def test_zero_request_window_guard():
+    """A hand-crafted all-zero window row (impossible from the scan —
+    closed windows always hold ``period`` requests, but hosts can feed
+    synthetic frames) degrades explicitly: count rates 0.0, latency
+    series NaN, no RuntimeWarning, and the table still renders."""
+    zeros = lambda *sh: np.zeros(sh, np.int32)
+    win = dram.TelemetryWindows(
+        **{f: zeros(1) for f in dram._TEL_SCALARS},
+        w_bank_issues=zeros(1, dram.GEOM.n_banks),
+        w_hist=zeros(1, dram.HIST_BUCKETS))
+    col = WindowCollector()
+    col.add(dram.TelemetryFrame(valid=np.array([True]), win=win))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        s = col.series()
+    assert s["hit_rate"][0] == 0.0 and s["slo_rate"][0] == 0.0
+    assert np.isnan(s["avg_lat_ns"][0])
+    assert np.isnan(s["p50_ns"][0]) and np.isnan(s["p99_ns"][0])
+    assert "nan" in window_table(s).lower()
+
+
+def test_all_noop_segment_is_telemetry_inert():
+    """An entire no-op segment spliced into the stream leaves the window
+    series byte-identical (the zero-request-window guard's scan-side
+    half: no-ops never open, advance, or close a window)."""
+    tr = _reuse_trace()
+    cfg = dataclasses.replace(_cfg("figcache_fast"), telemetry=PERIOD,
+                              slo_ns=SLO_NS)
+    ref, got = WindowCollector(), WindowCollector()
+    _stream(tr, cfg, chunk=160, collector=ref)
+    segs = list(streaming.iter_chunks(tr, 160))
+    segs.insert(1, streaming._noop_segment((160,)))
+    streaming.simulate_stream(iter(segs), cfg, telemetry=got)
+    a, b = ref.series(), got.series()
+    assert set(a) == set(b)
+    for k in a:
+        assert np.array_equal(a[k], b[k], equal_nan=True), k
+    assert np.array_equal(ref.cumulative()["hist"], got.cumulative()["hist"])
+
+
+def test_chrome_counter_roundtrip(tmp_path):
+    """Telemetry counter events survive the JSONL -> Chrome round trip
+    bit-exactly, interleaved with spans, with NaN samples dropped."""
+    tr = _reuse_trace()
+    cfg = dataclasses.replace(_cfg("figcache_fast"), telemetry=PERIOD,
+                              slo_ns=SLO_NS)
+    col = WindowCollector()
+    _stream(tr, cfg, collector=col)
+    s = col.series()
+    log = tmp_path / "tel.jsonl"
+    tracer = Tracer(str(log))
+    with tracer.span("replay"):
+        n = counter_events(tracer, s, PERIOD)
+    tracer.close()
+    assert n > 0
+    dst = tmp_path / "tel.chrome.json"
+    chrome_from_jsonl(str(log), str(dst))
+    evs = json.loads(dst.read_text())["traceEvents"]
+    cs = [e for e in evs if e["ph"] == "C"]
+    assert len(cs) == n
+    assert {e["name"] for e in cs} >= {"telemetry/hit_rate",
+                                       "telemetry/latency_ns",
+                                       "telemetry/slo"}
+    assert all(v == v for e in cs for v in e["args"].values())  # no NaN
+    first = next(e for e in cs if e["name"] == "telemetry/hit_rate")
+    assert first["args"]["hit_rate"] == float(s["hit_rate"][0])
+    assert first["ts"] == float(s["win_idx"][0]) * PERIOD
+    # spans still bracket correctly around the counter block
+    assert evs[0]["ph"] == "B" and evs[-1]["ph"] == "E"
+
+
+def _bench_diff_mod():
+    p = pathlib.Path(__file__).resolve().parents[1] / "benchmarks" \
+        / "bench_diff.py"
+    spec = importlib.util.spec_from_file_location("bench_diff_under_test", p)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_bench_diff_flags_injected_regression(tmp_path):
+    """The trajectory gate passes inside the band and fails past it —
+    demonstrated on an injected regression (satellite: bench_diff)."""
+    bd = _bench_diff_mod()
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    base.mkdir(), fresh.mkdir()
+    doc = {"hotloop_speedup": 6.5, "jits_capacity": 1}
+    (base / "BENCH_hotloop.json").write_text(json.dumps(doc))
+    # identical -> ok; a 20% dip sits inside the 50% band -> still ok
+    for wobble in (1.0, 0.8):
+        (fresh / "BENCH_hotloop.json").write_text(json.dumps(
+            dict(doc, hotloop_speedup=doc["hotloop_speedup"] * wobble)))
+        rows, fails = bd.diff(str(base), str(fresh))
+        assert fails == [], wobble
+        assert any(r["verdict"] == "ok" for r in rows)
+    # past the band + a jit-count bump -> both flagged, CLI exits 1
+    (fresh / "BENCH_hotloop.json").write_text(json.dumps(
+        dict(doc, hotloop_speedup=1.0, jits_capacity=2)))
+    rows, fails = bd.diff(str(base), str(fresh))
+    assert len(fails) == 2
+    assert {r["metric"] for r in rows if r["verdict"] == "FAIL"} == \
+        {"hotloop_speedup", "jits_capacity"}
+    assert bd.main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
+    # absent files are skipped with a note, never a failure
+    assert all(r["verdict"].startswith("skip")
+               for r in rows if r["file"] != "BENCH_hotloop.json")
+
+
+def test_tail_latency_contract_registered():
+    """The §16 tail-latency pipeline owns a declared jit budget
+    (satellite: the sanitizer knows the extended entry points)."""
+    from repro.analysis import contracts
+    assert "obs.tail-latency" in contracts.REGISTRY
+    assert contracts.check_contract("obs.tail-latency") == []
